@@ -1,0 +1,49 @@
+"""Fault tolerance demo: train, 'lose a node', restore the checkpoint onto
+a different parallel layout (elastic resharding), keep training.
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+import sys, os, tempfile
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+from repro.configs import get_reduced
+from repro.core.runtime import Runtime
+from repro.core.topology import ParallelConfig, make_mesh
+from repro.data.pipeline import DataConfig
+from repro.runtime.resilience import elastic_plan
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    cfg = get_reduced("qwen3-1.7b")
+    with tempfile.TemporaryDirectory() as d:
+        def mk(steps):
+            pc = ParallelConfig()
+            mesh = make_mesh(pc, devices=jax.devices()[:1])
+            rt = Runtime(mesh=mesh, pc=pc, impl="ref")
+            return Trainer(cfg, rt,
+                           OptConfig(lr=3e-3, total_steps=steps),
+                           DataConfig(vocab=cfg.vocab, seq_len=64,
+                                      global_batch=8, cp=1),
+                           TrainerConfig(num_steps=steps, ckpt_dir=d,
+                                         ckpt_every=10, log_every=10))
+
+        t1 = mk(20)
+        losses = t1.run()
+        print(f"phase 1: {losses[0]:.3f} -> {losses[-1]:.3f}; "
+              f"checkpointed at step 20")
+        # "failure": new trainer = new process; restores & continues.
+        # elastic_plan picks a layout for whatever chips survive:
+        print("elastic plan for 192 healthy chips:",
+              elastic_plan(192, kv_heads=8, n_heads=16))
+        t2 = mk(30)
+        assert t2.start_step == 20
+        more = t2.run()
+        print(f"phase 2 (resumed): -> {more[-1]:.3f}")
+        assert more[-1] < losses[0]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""2D-Attention on a multi-device mesh: the paper's core mechanism, shown
+directly against the single-device oracle — zigzag layout, head×context
+grid, Double-Ring, GQA KV replication, forward AND backward.
+
+    PYTHONPATH=src python examples/long_context_2d_attention.py
+(uses 8 fake host devices; re-execs itself with XLA_FLAGS)
+"""
+import os, sys
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.execv(sys.executable, [sys.executable] + sys.argv)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.topology import ParallelConfig, make_mesh
+from repro.core.attention2d import Attn2DConfig, attention_2d
+from repro.core.zigzag import to_zigzag, from_zigzag
+from repro.kernels.ref import attention_ref
+
+
+def main():
+    rng = np.random.default_rng(0)
+    B, S, H, HKV, D = 1, 512, 8, 4, 32
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, HKV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, HKV, D)), jnp.float32)
+
+    # hp=2 × (outer=2 × inner=2) = 8-way sequence parallelism
+    pc = ParallelConfig(hp=2, cp_outer=2, cp_inner=2,
+                        placement="context_first")
+    mesh = make_mesh(pc)
+    cfg = Attn2DConfig(hp=2, n_out=2, w=2, causal=True, impl="ref")
+
+    def loss(q, k, v):
+        qz, kz, vz = (to_zigzag(x, pc.cp) for x in (q, k, v))
+        with mesh:
+            out = attention_2d(qz, kz, vz, mesh=mesh, cfg=cfg)
+        return (from_zigzag(out, pc.cp) ** 2).sum()
+
+    with mesh:
+        val, grads = jax.value_and_grad(loss, argnums=(0, 1, 2))(q, k, v)
+    ref_out, _ = attention_ref(q, k, v, causal=True)
+    ref_val = (ref_out ** 2).sum()
+    print(f"2D-Attention loss {float(val):.4f} vs oracle "
+          f"{float(ref_val):.4f} (diff {abs(float(val-ref_val)):.2e})")
+    print("gradients flow through SeqAlltoAll + Double-Ring:",
+          [g.shape for g in grads])
+    assert abs(float(val - ref_val)) < 1e-2
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""Optimized-HLO text parsing: per-device collective byte accounting.
+
+``compiled.cost_analysis()`` has no collective traffic, so we parse the
+partitioned module: build a symbol table of every instruction's result
+bytes, then for each collective op sum its *operand* sizes (the
+assignment's definition of collective_bytes).  Async pairs are counted at
+``-start`` only.  Tuple-shaped results (variadic collectives) and
+``/*index=N*/`` comments are handled by a hand-rolled scanner — the dump
+grammar is too loose for a single regex.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1,
+    "token": 0, "opaque": 0, "s2": 1, "u2": 1,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute", "collective-broadcast",
+                  "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*")
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+
+def _participants(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def _wire_multiplier(op: str, n: int) -> float:
+    """Ring-algorithm bytes-on-the-wire per operand byte."""
+    if n <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if op in ("reduce-scatter", "all-to-all", "ragged-all-to-all"):
+        return (n - 1) / n
+    if op == "all-gather":          # operand is the local shard
+        return float(n - 1)
+    return 1.0                      # collective-permute / broadcast
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _balanced(text: str, start: int) -> int:
+    """index just past the paren group opening at text[start] == '('."""
+    depth = 0
+    for i in range(start, len(text)):
+        if text[i] == "(":
+            depth += 1
+        elif text[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(text)
+
+
+def _parse_def(line: str):
+    """-> (name, shape_str, op, operand_str) or None."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1).lstrip("%")
+    i = m.end()
+    if i >= len(line):
+        return None
+    # shape: either a tuple "(...)" or a single token
+    if line[i] == "(":
+        j = _balanced(line, i)
+        shape_str = line[i:j]
+    else:
+        j = line.find(" ", i)
+        if j < 0:
+            return None
+        shape_str = line[i:j]
+    # op name
+    while j < len(line) and line[j] == " ":
+        j += 1
+    k = j
+    while k < len(line) and (line[k].isalnum() or line[k] in "-_."):
+        k += 1
+    op = line[j:k]
+    if k >= len(line) or line[k] != "(":
+        return name, shape_str, op, ""
+    end = _balanced(line, k)
+    return name, shape_str, op, line[k + 1:end - 1]
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """{"total": int, "by_op": {op: bytes}, "counts": {op: n}} — bytes are
+    per-device operand bytes (the partitioned module is per-device)."""
+    sizes: dict[str, int] = {}
+    defs = []
+    for line in hlo_text.splitlines():
+        parsed = _parse_def(line)
+        if parsed is None:
+            continue
+        name, shape_str, op, operands = parsed
+        sizes[name] = _shape_bytes(shape_str)
+        defs.append((op, operands, line))
+
+    by_op: dict[str, int] = defaultdict(int)
+    wire_by_op: dict[str, float] = defaultdict(float)
+    counts: dict[str, int] = defaultdict(int)
+    for op, operands, line in defs:
+        base = op
+        for suffix in ("-start", "-done"):
+            if base.endswith(suffix):
+                base = base[: -len(suffix)]
+        if base not in COLLECTIVE_OPS or op.endswith("-done"):
+            continue
+        operand_bytes = 0
+        for ref in _OPERAND_RE.findall(operands):
+            operand_bytes += sizes.get(ref.lstrip("%"), 0)
+        by_op[base] += operand_bytes
+        wire_by_op[base] += operand_bytes * _wire_multiplier(
+            base, _participants(line))
+        counts[base] += 1
+    return {"total": int(sum(by_op.values())),
+            "wire_total": int(sum(wire_by_op.values())),
+            "by_op": {k: int(v) for k, v in by_op.items()},
+            "wire_by_op": {k: int(v) for k, v in wire_by_op.items()},
+            "counts": dict(counts)}

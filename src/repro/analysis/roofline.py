@@ -1,0 +1,139 @@
+"""Roofline model (TPU v5e) over dry-run artifacts.
+
+Per (arch × shape × mesh):
+
+    compute term    = HLO_FLOPs_total / (chips × 197e12 FLOP/s)
+    memory term     = HLO_bytes_total / (chips × 819e9 B/s)
+    collective term = collective_bytes_total / (chips × 50e9 B/s)
+
+``cost_analysis``/HLO parsing run on the *partitioned* (per-device) module,
+so totals are per-device values × chips, and the terms reduce to
+per-device / peak.  MODEL_FLOPS = 6·N·(tokens) for training (2·N·tokens for
+prefill/decode), with N_active for MoE; the ratio MODEL_FLOPS / HLO_FLOPs
+exposes remat / masking / padding waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_total: float
+    useful_ratio: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How much of the step is the *ideal* compute time — the score."""
+        ideal = (self.model_flops / self.hlo_flops_total) * self.compute_s \
+            if self.hlo_flops_total else 0.0
+        return ideal / self.bound_s if self.bound_s else 0.0
+
+
+def count_params(cfg) -> tuple[int, int]:
+    """(total, active) parameter counts (active < total only for MoE)."""
+    from repro.models.model import init_params
+    struct = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    total = sum(int(x.size) for x in jax.tree.leaves(struct))
+    active = total
+    if cfg.moe is not None:
+        flat = jax.tree_util.tree_flatten_with_path(struct)[0]
+        expert = sum(int(v.size) for k, v in flat
+                     if "'w1'" in jax.tree_util.keystr(k)
+                     or "'w2'" in jax.tree_util.keystr(k)
+                     or "'w3'" in jax.tree_util.keystr(k))
+        active = total - expert \
+            + int(expert * cfg.moe.top_k / cfg.moe.n_experts)
+    return total, active
+
+
+def model_flops(cfg, shape_kind: str, seq_len: int, global_batch: int,
+                n_active: int) -> float:
+    """Paper-style useful FLOPs (attention halved for causal is *not*
+    added here — 6·N·D is the standard dense-matmul accounting)."""
+    if shape_kind == "train":
+        tokens = seq_len * global_batch
+        return 6.0 * n_active * tokens
+    if shape_kind == "prefill":
+        tokens = seq_len * global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * global_batch
+
+
+def terms_from_record(rec: dict) -> RooflineTerms:
+    chips = rec["chips"]
+    flops_dev = rec["cost"]["flops"]
+    bytes_dev = rec["cost"].get("bytes_accessed", 0.0)
+    # wire bytes (ring-algorithm per-op multipliers) when recorded
+    coll_dev = rec["collectives"].get("wire_total",
+                                      rec["collectives"]["total"])
+    return RooflineTerms(
+        compute_s=flops_dev / PEAK_FLOPS,
+        memory_s=bytes_dev / HBM_BW,
+        collective_s=coll_dev / ICI_BW,
+        model_flops=rec["model_flops"],
+        hlo_flops_total=flops_dev * chips,
+        useful_ratio=(rec["model_flops"] / (flops_dev * chips))
+        if flops_dev else 0.0)
+
+
+def load_records(directory: str) -> list[dict]:
+    recs = []
+    for name in sorted(os.listdir(directory)):
+        if name.endswith(".json"):
+            with open(os.path.join(directory, name)) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def format_table(recs: list[dict]) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':9s} {'pc':14s} "
+           f"{'comp_ms':>8s} {'mem_ms':>8s} {'coll_ms':>8s} {'bound':>10s} "
+           f"{'useful':>7s} {'roofl%':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in recs:
+        t = terms_from_record(r)
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:9s} "
+            f"{r['pc']:14s} "
+            f"{t.compute_s*1e3:8.2f} {t.memory_s*1e3:8.2f} "
+            f"{t.collective_s*1e3:8.2f} {t.dominant:>10s} "
+            f"{t.useful_ratio:7.3f} {100*t.roofline_fraction:6.1f}%")
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    recs = load_records(args.dir)
+    print(format_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Architecture registry: ``get_config(name)`` / ``get_reduced(name)``.
+
+One module per assigned architecture; each exposes ``config()`` (the exact
+assigned dims), ``reduced()`` (a tiny same-family config for CPU smoke
+tests) and ``parallel(shape, multi_pod)`` (the default 2D layout).
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "whisper_small",
+    "zamba2_7b",
+    "gemma3_12b",
+    "qwen3_1_7b",
+    "gemma2_2b",
+    "olmo_1b",
+    "qwen3_moe_30b_a3b",
+    "deepseek_v2_lite_16b",
+    "chameleon_34b",
+    "falcon_mamba_7b",
+]
+
+#: public arch ids (dashes) -> module names
+ARCH_IDS = {a.replace("_", "-"): a for a in ARCHS}
+# keep the canonical ids from the assignment
+CANONICAL = {
+    "whisper-small": "whisper_small",
+    "zamba2-7b": "zamba2_7b",
+    "gemma3-12b": "gemma3_12b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "gemma2-2b": "gemma2_2b",
+    "olmo-1b": "olmo_1b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "chameleon-34b": "chameleon_34b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+}
+
+
+def _module(name: str):
+    mod = CANONICAL.get(name) or ARCH_IDS.get(name) or name
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str):
+    return _module(name).config()
+
+
+def get_reduced(name: str):
+    return _module(name).reduced()
+
+
+def get_parallel(name: str, shape: str, multi_pod: bool = False):
+    return _module(name).parallel(shape, multi_pod)
+
+
+def all_arch_names():
+    return list(CANONICAL.keys())

@@ -1,0 +1,27 @@
+"""chameleon-34b [vlm] 48L d_model=8192 64H (GQA kv=8) d_ff=22016
+vocab=65536 — early-fusion, VQ image tokens.  [arXiv:2405.09818;
+unverified]
+
+Early fusion means image patches arrive as discrete VQ codes *inside the
+token vocabulary*, so the backbone consumes plain token ids; the VQ
+tokenizer is the stubbed frontend (``input_specs`` provides ids)."""
+from repro.configs.common import default_parallel
+from repro.models.model import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="chameleon-34b", family="dense", num_layers=48, d_model=8192,
+        n_heads=64, n_kv_heads=8, d_ff=22016, vocab=65536,
+        qk_norm=True, tie_embeddings=False, loss_chunk=4096)
+
+
+def reduced():
+    return ModelConfig(
+        name="chameleon-34b-smoke", family="dense", num_layers=2,
+        d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=512,
+        qk_norm=True, tie_embeddings=False, dtype="float32", loss_chunk=64)
+
+
+def parallel(shape: str, multi_pod: bool = False):
+    return default_parallel(hp=8, cp=2, multi_pod=multi_pod)

@@ -1,0 +1,49 @@
+"""Shared config helpers: shapes, default parallel layouts, applicability."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.topology import ParallelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str              # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+#: archs where long_500k is skipped (pure full attention — see DESIGN.md)
+LONG_CTX_SKIP = {
+    "qwen3-1.7b", "olmo-1b", "chameleon-34b", "whisper-small",
+    "qwen3-moe-30b-a3b", "deepseek-v2-lite-16b",
+}
+
+
+def applicable_shapes(arch: str):
+    out = []
+    for s in SHAPES.values():
+        if s.name == "long_500k" and arch in LONG_CTX_SKIP:
+            continue
+        out.append(s.name)
+    return out
+
+
+def default_parallel(*, hp: int, cp: int, inner: int | None = None,
+                     multi_pod: bool = False,
+                     placement: str = "head_first") -> ParallelConfig:
+    """Default layout on the production mesh: model axis (16) = hp × cp."""
+    assert hp * cp == 16, (hp, cp)
+    if inner is None:
+        inner = min(cp, 4)
+    assert cp % inner == 0
+    return ParallelConfig(dp=16, hp=hp, cp_outer=cp // inner, cp_inner=inner,
+                          pods=2 if multi_pod else 1, placement=placement)

@@ -1,0 +1,32 @@
+"""falcon-mamba-7b [ssm] 64L d_model=4096 (attn-free) vocab=65024,
+ssm_state=16 — mamba1 arch.  [arXiv:2410.05355; unverified]
+
+2D-Attention is inapplicable (attention-free); the sequence remains sharded
+over all sp axes and the selective scan crosses shards via the chunked-scan
+state hand-off (see models/ssm.py + DESIGN.md §Arch-applicability)."""
+from repro.configs.common import default_parallel
+from repro.models.model import ModelConfig
+from repro.models.ssm import Mamba1Dims
+
+
+def config():
+    return ModelConfig(
+        name="falcon-mamba-7b", family="ssm", num_layers=64, d_model=4096,
+        n_heads=1, n_kv_heads=1, d_ff=0, vocab=65024, rope=False,
+        tie_embeddings=False, zigzag=False,
+        ssm1=Mamba1Dims(d_model=4096, d_inner=8192, d_state=16, d_conv=4,
+                        seg=16))
+
+
+def reduced():
+    return ModelConfig(
+        name="falcon-mamba-smoke", family="ssm", num_layers=2, d_model=64,
+        n_heads=1, n_kv_heads=1, d_ff=0, vocab=512, rope=False,
+        tie_embeddings=False, zigzag=False, dtype="float32", loss_chunk=64,
+        ssm1=Mamba1Dims(d_model=64, d_inner=128, d_state=8, d_conv=4,
+                        seg=8))
+
+
+def parallel(shape: str, multi_pod: bool = False):
+    return default_parallel(hp=1, cp=16, inner=4, multi_pod=multi_pod,
+                            placement="context_first")

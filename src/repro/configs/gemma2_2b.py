@@ -1,0 +1,27 @@
+"""gemma2-2b [dense] 26L d_model=2304 8H (GQA kv=4) d_ff=9216
+vocab=256000 — local+global alternating, logit softcap.
+[arXiv:2408.00118; hf]"""
+from repro.configs.common import default_parallel
+from repro.models.model import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="gemma2-2b", family="dense", num_layers=26, d_model=2304,
+        n_heads=8, n_kv_heads=4, d_ff=9216, vocab=256000,
+        window=4096, window_pattern=2, attn_softcap=50.0,
+        final_softcap=30.0, post_norms=True, embed_scale=True,
+        act="gelu", tie_embeddings=True)
+
+
+def reduced():
+    return ModelConfig(
+        name="gemma2-2b-smoke", family="dense", num_layers=4, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab=512,
+        window=16, window_pattern=2, attn_softcap=50.0, final_softcap=30.0,
+        post_norms=True, embed_scale=True, act="gelu", dtype="float32",
+        loss_chunk=64)
+
+
+def parallel(shape: str, multi_pod: bool = False):
+    return default_parallel(hp=4, cp=4, multi_pod=multi_pod)

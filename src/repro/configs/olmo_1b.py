@@ -1,0 +1,22 @@
+"""olmo-1b [dense] 16L d_model=2048 16H (MHA kv=16) d_ff=8192
+vocab=50304 — non-parametric LN.  [arXiv:2402.00838; hf]"""
+from repro.configs.common import default_parallel
+from repro.models.model import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="olmo-1b", family="dense", num_layers=16, d_model=2048,
+        n_heads=16, n_kv_heads=16, d_ff=8192, vocab=50304,
+        norm="ln_np", tie_embeddings=True)
+
+
+def reduced():
+    return ModelConfig(
+        name="olmo-1b-smoke", family="dense", num_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=4, d_ff=128, vocab=512,
+        norm="ln_np", dtype="float32", loss_chunk=64)
+
+
+def parallel(shape: str, multi_pod: bool = False):
+    return default_parallel(hp=8, cp=2, multi_pod=multi_pod)

@@ -1,0 +1,28 @@
+"""qwen3-moe-30b-a3b [moe] 48L d_model=2048 32H (GQA kv=4) d_ff=768
+vocab=151936, MoE 128e top-8.  [hf:Qwen/Qwen3-30B-A3B; hf]
+head_dim = d_model/H = 64 (spec-derived)."""
+from repro.configs.common import default_parallel
+from repro.models.model import ModelConfig
+from repro.models.moe import MoEDims
+
+
+def config():
+    return ModelConfig(
+        name="qwen3-moe-30b-a3b", family="moe", num_layers=48,
+        d_model=2048, n_heads=32, n_kv_heads=4, d_ff=768, vocab=151936,
+        qk_norm=True, rope_theta=1e6, tie_embeddings=False,
+        moe=MoEDims(d_model=2048, n_experts=128, top_k=8, d_ff=768,
+                    norm_topk=True))
+
+
+def reduced():
+    return ModelConfig(
+        name="qwen3-moe-smoke", family="moe", num_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=64, vocab=512, qk_norm=True,
+        tie_embeddings=False, dtype="float32", loss_chunk=64,
+        moe=MoEDims(d_model=64, n_experts=8, top_k=2, d_ff=64,
+                    capacity_factor=8.0, norm_topk=True))
+
+
+def parallel(shape: str, multi_pod: bool = False):
+    return default_parallel(hp=4, cp=4, multi_pod=multi_pod)

@@ -1,0 +1,30 @@
+"""whisper-small [audio] enc-dec, 12L d_model=768 12H (MHA kv=12)
+d_ff=3072 vocab=51865 — conv frontend STUBBED: ``input_specs`` provides
+precomputed frame embeddings (B, 1536, d_model).  [arXiv:2212.04356;
+unverified]
+
+seq_len applies to the decoder/KV-cache side (config exercise — the real
+model caps at 448 decoder positions); encoder context is fixed at 1536
+stub frames (1500 padded to a 16-divisible length)."""
+from repro.configs.common import default_parallel
+from repro.models.model import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="whisper-small", family="encdec", num_layers=12,
+        encoder_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+        d_ff=3072, vocab=51865, norm="ln", rope=False,
+        enc_frames=1536, max_positions=32768, tie_embeddings=True)
+
+
+def reduced():
+    return ModelConfig(
+        name="whisper-smoke", family="encdec", num_layers=2,
+        encoder_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+        vocab=512, norm="ln", rope=False, enc_frames=32, max_positions=128,
+        tie_embeddings=True, dtype="float32", loss_chunk=64)
+
+
+def parallel(shape: str, multi_pod: bool = False):
+    return default_parallel(hp=4, cp=4, multi_pod=multi_pod)

@@ -1,0 +1,470 @@
+"""2D-Attention: head-parallel × context-parallel distributed attention.
+
+The paper's core mechanism (LoongTrain §4), TPU-native:
+
+* **SeqAlltoAll** (Ulysses): ``jax.lax.all_to_all`` over the ``head`` mesh
+  axis redistributes Q/K/V from ``(S/d_sp sequence, all heads)`` to
+  ``(S/d_cp sequence, H/d_hp heads)`` and back.
+* **KV replication** (paper §4.2): when ``d_hp > H_kv`` the KV heads are
+  replicated *before* the all-to-all; the replica-gradient aggregation of the
+  backward pass falls out of JAX's transpose of ``jnp.repeat``.
+* **Double-Ring-Attention** (paper §4.3, Algorithm 2): the context group is
+  factored into ``outer × inner`` mesh axes.  KV chunks rotate with
+  ``jax.lax.ppermute`` — inner ring every micro-step, outer ring once per
+  outer step, issued *before* the inner loop so XLA's latency-hiding
+  scheduler overlaps it with the whole inner round (the paper's prefetch).
+  Two concurrent ppermutes on distinct mesh axes travel on distinct ICI
+  torus dimensions — the TPU analogue of "use all NICs".
+* **Zigzag causal load balance**: context rank ``i`` owns logical sequence
+  chunks ``(i, 2·cp−1−i)`` (the data pipeline pre-permutes tokens, paper
+  §4.4's loader post-processing).  Every ring step then computes exactly two
+  C×C sub-blocks per rank:
+
+      j < i : whole-Q × K_lo        (both full)
+      j = i : causal diagonal       (two causal halves + one full)
+      j > i : Q_hi × whole-K        (both full)
+
+  so per-step FLOPs are balanced and ≈ useful FLOPs.
+* The ring is one ``jax.custom_vjp`` unit: forward accumulates (out, lse)
+  with the flash combine rule; backward re-runs the ring, accumulating dq
+  locally while dk/dv ride around the rings *with* their KV chunk and arrive
+  home after a full cycle.
+
+Everything here is the *per-shard* program (runs under ``shard_map``);
+``attention_2d`` is the global-array entry point.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.topology import (AXIS_HP, AXIS_INNER, AXIS_OUTER, BATCH_AXES,
+                                 SEQ_AXES)
+from repro.kernels.ops import flash_attention, flash_bwd_chunk, flash_fwd_chunk
+from repro.kernels.ref import NEG_INF, combine_pair
+
+
+class Attn2DConfig(NamedTuple):
+    """Static 2D-Attention configuration (hashable)."""
+    hp: int = 1
+    n_out: int = 1            # outer ring size (d_cp / w)
+    w: int = 1                # inner ring size (paper's w)
+    causal: bool = True
+    zigzag: bool = True       # False: contiguous chunks (hybrid/SSM models)
+    window: int | None = None
+    softcap: float = 0.0
+    scale: float | None = None
+    impl: str = "auto"
+    axis_hp: str = AXIS_HP
+    axis_outer: str = AXIS_OUTER
+    axis_inner: str = AXIS_INNER
+
+    @property
+    def cp(self) -> int:
+        return self.n_out * self.w
+
+
+class RingConfig(NamedTuple):
+    """Static ring configuration (the custom_vjp nondiff arg)."""
+    n_out: int
+    w: int
+    causal: bool
+    zigzag: bool
+    window: int | None
+    softcap: float
+    scale: float
+    impl: str
+    axis_outer: str
+    axis_inner: str
+
+    @property
+    def cp(self) -> int:
+        return self.n_out * self.w
+
+
+def _shift(x, axis: str, size: int):
+    """Ring ppermute: every rank sends to (r+1) % size, receives from r-1."""
+    if size == 1:
+        return x
+    return lax.ppermute(x, axis, [(r, (r + 1) % size) for r in range(size)])
+
+
+def _ring_indices(cfg: RingConfig):
+    i_out = lax.axis_index(cfg.axis_outer)
+    i_in = lax.axis_index(cfg.axis_inner)
+    return i_out, i_in, i_out * cfg.w + i_in
+
+
+def _visiting(cfg: RingConfig, i_out, i_in, o: int, t: int):
+    """Global cp index of the KV chunk visiting this rank at step (o, t)."""
+    j_out = (i_out - o) % cfg.n_out
+    j_in = (i_in - t) % cfg.w
+    return j_out * cfg.w + j_in
+
+
+def _kw(cfg: RingConfig):
+    return dict(softcap=cfg.softcap, scale=cfg.scale, impl=cfg.impl)
+
+
+# ---------------------------------------------------------------------------
+# Ring forward
+# ---------------------------------------------------------------------------
+
+def _step_fwd(q, kc, vc, o: int, t: int, i_out, i_in, i, cfg: RingConfig):
+    """Partial (out, lse) of local q against the visiting KV chunk pair."""
+    kw = _kw(cfg)
+    if not cfg.causal:
+        return flash_fwd_chunk(q, kc, vc, causal=False, **kw)
+
+    if not cfg.zigzag:
+        # Contiguous chunks (no causal load balance): chunk r = cp rank r.
+        # Used by hybrid/SSM models whose recurrent layers need contiguous
+        # sequence shards; the paper's balanced layout needs the zigzag
+        # data permutation which those layers cannot tolerate.
+        if o == 0 and t == 0:
+            return flash_fwd_chunk(q, kc, vc, causal=True,
+                                   window=cfg.window, **kw)
+        j = _visiting(cfg, i_out, i_in, o, t)
+        s_loc = q.shape[1]
+
+        def past(q, kc, vc):
+            if cfg.window is None:
+                return flash_fwd_chunk(q, kc, vc, causal=False, **kw)
+            return flash_fwd_chunk(q, kc, vc, causal=True, window=cfg.window,
+                                   mask_offset=(i - j) * s_loc, **kw)
+
+        def future(q, kc, vc):
+            b, _, hq, dh = q.shape
+            return (jnp.zeros_like(q),
+                    jnp.full((b, hq, s_loc), NEG_INF, jnp.float32))
+
+        return lax.cond(j < i, past, future, q, kc, vc)
+
+    c = q.shape[1] // 2
+    cp = cfg.cp
+    if o == 0 and t == 0:
+        # Diagonal: q_lo=chunk i, q_hi=chunk 2cp-1-i; kv = same chunks.
+        o_lo, l_lo = flash_fwd_chunk(
+            q[:, :c], kc[:, :c], vc[:, :c], causal=True, window=cfg.window,
+            **kw)
+        if cfg.window is None:
+            # bottom-right-aligned causal == full on k_lo + diag on k_hi
+            o_hi, l_hi = flash_fwd_chunk(q[:, c:], kc, vc, causal=True, **kw)
+        else:
+            p1 = flash_fwd_chunk(q[:, c:], kc[:, :c], vc[:, :c], causal=True,
+                                 window=cfg.window,
+                                 mask_offset=(2 * cp - 1 - 2 * i) * c, **kw)
+            p2 = flash_fwd_chunk(q[:, c:], kc[:, c:], vc[:, c:], causal=True,
+                                 window=cfg.window, **kw)
+            o_hi, l_hi = combine_pair(p1[0], p1[1], p2[0], p2[1])
+        return (jnp.concatenate([o_lo, o_hi], axis=1),
+                jnp.concatenate([l_lo, l_hi], axis=2))
+
+    j = _visiting(cfg, i_out, i_in, o, t)
+
+    if cfg.window is None:
+        def case_a(q, kc, vc):
+            # j < i: whole local q attends the visitor's low chunk, fully.
+            return flash_fwd_chunk(q, kc[:, :c], vc[:, :c], causal=False,
+                                   **kw)
+
+        def case_b(q, kc, vc):
+            # j > i: only q_hi attends, but against the visitor's whole kv.
+            o_hi, l_hi = flash_fwd_chunk(q[:, c:], kc, vc, causal=False,
+                                         **kw)
+            return (jnp.concatenate([jnp.zeros_like(o_hi), o_hi], axis=1),
+                    jnp.concatenate([jnp.full_like(l_hi, NEG_INF), l_hi],
+                                    axis=2))
+    else:
+        def case_a(q, kc, vc):
+            lo = flash_fwd_chunk(q[:, :c], kc[:, :c], vc[:, :c], causal=True,
+                                 window=cfg.window, mask_offset=(i - j) * c,
+                                 **kw)
+            hi = flash_fwd_chunk(q[:, c:], kc[:, :c], vc[:, :c], causal=True,
+                                 window=cfg.window,
+                                 mask_offset=(2 * cp - 1 - i - j) * c, **kw)
+            return (jnp.concatenate([lo[0], hi[0]], axis=1),
+                    jnp.concatenate([lo[1], hi[1]], axis=2))
+
+        def case_b(q, kc, vc):
+            h1 = flash_fwd_chunk(q[:, c:], kc[:, :c], vc[:, :c], causal=True,
+                                 window=cfg.window,
+                                 mask_offset=(2 * cp - 1 - i - j) * c, **kw)
+            h2 = flash_fwd_chunk(q[:, c:], kc[:, c:], vc[:, c:], causal=True,
+                                 window=cfg.window, mask_offset=(j - i) * c,
+                                 **kw)
+            o_hi, l_hi = combine_pair(h1[0], h1[1], h2[0], h2[1])
+            return (jnp.concatenate([jnp.zeros_like(o_hi), o_hi], axis=1),
+                    jnp.concatenate([jnp.full_like(l_hi, NEG_INF), l_hi],
+                                    axis=2))
+
+    return lax.cond(j < i, case_a, case_b, q, kc, vc)
+
+
+def _ring_fwd(q, k, v, cfg: RingConfig):
+    i_out, i_in, i = _ring_indices(cfg)
+    acc_o = None
+    acc_l = None
+    k0, v0 = k, v
+    for o in range(cfg.n_out):
+        nxt_outer = None
+        if o < cfg.n_out - 1:
+            # Outer prefetch (Alg. 2 line 3): issued before the inner loop so
+            # it overlaps the whole inner round.
+            nxt_outer = (_shift(k0, cfg.axis_outer, cfg.n_out),
+                         _shift(v0, cfg.axis_outer, cfg.n_out))
+        kc, vc = k0, v0
+        for t in range(cfg.w):
+            nxt_inner = None
+            if t < cfg.w - 1:
+                nxt_inner = (_shift(kc, cfg.axis_inner, cfg.w),
+                             _shift(vc, cfg.axis_inner, cfg.w))
+            po, pl_ = _step_fwd(q, kc, vc, o, t, i_out, i_in, i, cfg)
+            if acc_o is None:
+                acc_o, acc_l = po.astype(jnp.float32), pl_
+            else:
+                acc_o, acc_l = combine_pair(acc_o, acc_l, po, pl_)
+            if nxt_inner is not None:
+                kc, vc = nxt_inner
+        if nxt_outer is not None:
+            k0, v0 = nxt_outer
+    return acc_o.astype(q.dtype), acc_l
+
+
+# ---------------------------------------------------------------------------
+# Ring backward
+# ---------------------------------------------------------------------------
+
+def _step_bwd(q, kc, vc, out, lse, do, o: int, t: int, i_out, i_in, i,
+              cfg: RingConfig):
+    """(dq_part, dk_part, dv_part) for the KV chunk visiting at (o, t).
+
+    ``out``/``lse`` are the final combined values (global softmax), so each
+    step's contribution is exact and linear.
+    """
+    kw = _kw(cfg)
+    if not cfg.causal:
+        return flash_bwd_chunk(q, kc, vc, out, lse, do, causal=False, **kw)
+
+    if not cfg.zigzag:
+        if o == 0 and t == 0:
+            return flash_bwd_chunk(q, kc, vc, out, lse, do, causal=True,
+                                   window=cfg.window, **kw)
+        j = _visiting(cfg, i_out, i_in, o, t)
+        s_loc = q.shape[1]
+
+        def past(q, kc, vc, out, lse, do):
+            if cfg.window is None:
+                return flash_bwd_chunk(q, kc, vc, out, lse, do,
+                                       causal=False, **kw)
+            return flash_bwd_chunk(q, kc, vc, out, lse, do, causal=True,
+                                   window=cfg.window,
+                                   mask_offset=(i - j) * s_loc, **kw)
+
+        def future(q, kc, vc, out, lse, do):
+            return (jnp.zeros_like(q), jnp.zeros_like(kc),
+                    jnp.zeros_like(vc))
+
+        return lax.cond(j < i, past, future, q, kc, vc, out, lse, do)
+
+    c = q.shape[1] // 2
+    cp = cfg.cp
+    q_lo, q_hi = q[:, :c], q[:, c:]
+    o_lo, o_hi = out[:, :c], out[:, c:]
+    g_lo, g_hi = do[:, :c], do[:, c:]
+    l_lo, l_hi = lse[:, :, :c], lse[:, :, c:]
+    zeros_kv = jnp.zeros_like(kc[:, :c])
+
+    if o == 0 and t == 0:
+        dq1, dk1, dv1 = flash_bwd_chunk(q_lo, kc[:, :c], vc[:, :c], o_lo,
+                                        l_lo, g_lo, causal=True,
+                                        window=cfg.window, **kw)
+        if cfg.window is None:
+            dq2, dkf, dvf = flash_bwd_chunk(q_hi, kc, vc, o_hi, l_hi, g_hi,
+                                            causal=True, **kw)
+        else:
+            a1 = flash_bwd_chunk(q_hi, kc[:, :c], vc[:, :c], o_hi, l_hi,
+                                 g_hi, causal=True, window=cfg.window,
+                                 mask_offset=(2 * cp - 1 - 2 * i) * c, **kw)
+            a2 = flash_bwd_chunk(q_hi, kc[:, c:], vc[:, c:], o_hi, l_hi,
+                                 g_hi, causal=True, window=cfg.window, **kw)
+            dq2 = a1[0] + a2[0]
+            dkf = jnp.concatenate([a1[1], a2[1]], axis=1)
+            dvf = jnp.concatenate([a1[2], a2[2]], axis=1)
+        dq = jnp.concatenate([dq1, dq2], axis=1)
+        dk = dkf + jnp.concatenate([dk1, jnp.zeros_like(dk1)], axis=1)
+        dv = dvf + jnp.concatenate([dv1, jnp.zeros_like(dv1)], axis=1)
+        return dq, dk, dv
+
+    j = _visiting(cfg, i_out, i_in, o, t)
+
+    if cfg.window is None:
+        def case_a(q, kc, vc, out, lse, do):
+            dqa, dk_lo, dv_lo = flash_bwd_chunk(
+                q, kc[:, :c], vc[:, :c], out, lse, do, causal=False, **kw)
+            return (dqa,
+                    jnp.concatenate([dk_lo, zeros_kv], axis=1),
+                    jnp.concatenate([dv_lo, zeros_kv], axis=1))
+
+        def case_b(q, kc, vc, out, lse, do):
+            dqb, dka, dva = flash_bwd_chunk(
+                q[:, c:], kc, vc, out[:, c:], lse[:, :, c:], do[:, c:],
+                causal=False, **kw)
+            return (jnp.concatenate([jnp.zeros_like(dqb), dqb], axis=1),
+                    dka, dva)
+    else:
+        def case_a(q, kc, vc, out, lse, do):
+            d1 = flash_bwd_chunk(q[:, :c], kc[:, :c], vc[:, :c], out[:, :c],
+                                 lse[:, :, :c], do[:, :c], causal=True,
+                                 window=cfg.window, mask_offset=(i - j) * c,
+                                 **kw)
+            d2 = flash_bwd_chunk(q[:, c:], kc[:, :c], vc[:, :c], out[:, c:],
+                                 lse[:, :, c:], do[:, c:], causal=True,
+                                 window=cfg.window,
+                                 mask_offset=(2 * cp - 1 - i - j) * c, **kw)
+            return (jnp.concatenate([d1[0], d2[0]], axis=1),
+                    jnp.concatenate([d1[1] + d2[1], zeros_kv], axis=1),
+                    jnp.concatenate([d1[2] + d2[2], zeros_kv], axis=1))
+
+        def case_b(q, kc, vc, out, lse, do):
+            d1 = flash_bwd_chunk(q[:, c:], kc[:, :c], vc[:, :c], out[:, c:],
+                                 lse[:, :, c:], do[:, c:], causal=True,
+                                 window=cfg.window,
+                                 mask_offset=(2 * cp - 1 - i - j) * c, **kw)
+            d2 = flash_bwd_chunk(q[:, c:], kc[:, c:], vc[:, c:], out[:, c:],
+                                 lse[:, :, c:], do[:, c:], causal=True,
+                                 window=cfg.window, mask_offset=(j - i) * c,
+                                 **kw)
+            return (jnp.concatenate([jnp.zeros_like(d1[0]), d1[0] + d2[0]],
+                                    axis=1),
+                    jnp.concatenate([d1[1], d2[1]], axis=1),
+                    jnp.concatenate([d1[2], d2[2]], axis=1))
+
+    return lax.cond(j < i, case_a, case_b, q, kc, vc, out, lse, do)
+
+
+def _ring_bwd(q, k, v, out, lse, do, cfg: RingConfig):
+    i_out, i_in, i = _ring_indices(cfg)
+    dq = jnp.zeros(q.shape, jnp.float32)
+    k0, v0 = k, v
+    dk0 = jnp.zeros(k.shape, jnp.float32)
+    dv0 = jnp.zeros(v.shape, jnp.float32)
+    for o in range(cfg.n_out):
+        kc, vc, dkc, dvc = k0, v0, dk0, dv0
+        for t in range(cfg.w):
+            dq_p, dk_p, dv_p = _step_bwd(q, kc, vc, out, lse, do, o, t,
+                                         i_out, i_in, i, cfg)
+            dq = dq + dq_p.astype(jnp.float32)
+            dkc = dkc + dk_p.astype(jnp.float32)
+            dvc = dvc + dv_p.astype(jnp.float32)
+            # dk/dv ride the inner ring with their chunk; the last rotation
+            # completes the inner cycle so the chunk grads are home (within
+            # this outer round) before the outer hop.
+            last = (t == cfg.w - 1) and (o == cfg.n_out - 1)
+            if not last:
+                kc = _shift(kc, cfg.axis_inner, cfg.w)
+                vc = _shift(vc, cfg.axis_inner, cfg.w)
+            dkc = _shift(dkc, cfg.axis_inner, cfg.w)
+            dvc = _shift(dvc, cfg.axis_inner, cfg.w)
+        # Outer hop: the visiting set (with its accumulated grads) moves on;
+        # after n_out hops every chunk's grads are back at their owner.
+        if o < cfg.n_out - 1:
+            k0 = _shift(kc, cfg.axis_outer, cfg.n_out)
+            v0 = _shift(vc, cfg.axis_outer, cfg.n_out)
+        dk0 = _shift(dkc, cfg.axis_outer, cfg.n_out)
+        dv0 = _shift(dvc, cfg.axis_outer, cfg.n_out)
+    return dq.astype(q.dtype), dk0.astype(k.dtype), dv0.astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def ring_attention(q, k, v, cfg: RingConfig):
+    """Double-ring zigzag attention over the local (post-AlltoAll) shards.
+
+    q: (b, S/cp, Hq/hp, d);  k/v: (b, S/cp, Hkv_eff/hp, d).
+    """
+    out, _ = _ring_fwd(q, k, v, cfg)
+    return out
+
+
+def _ring_vjp_fwd(q, k, v, cfg: RingConfig):
+    out, lse = _ring_fwd(q, k, v, cfg)
+    return out, (q, k, v, out, lse)
+
+
+def _ring_vjp_bwd(cfg: RingConfig, res, do):
+    q, k, v, out, lse = res
+    return _ring_bwd(q, k, v, out, lse, do, cfg)
+
+
+ring_attention.defvjp(_ring_vjp_fwd, _ring_vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# SeqAlltoAll + public API
+# ---------------------------------------------------------------------------
+
+def attention_2d_local(q, k, v, cfg: Attn2DConfig):
+    """Per-shard 2D-Attention (call under shard_map).
+
+    q: (b, S/d_sp, Hq, d);  k/v: (b, S/d_sp, Hkv, d).  Returns q-shaped out.
+    """
+    b, s_loc, hq, dh = q.shape
+    hkv = k.shape[2]
+    scale = cfg.scale if cfg.scale is not None else 1.0 / (dh ** 0.5)
+
+    if cfg.hp > hkv:
+        # Paper §4.2: replicate KV heads to d_hp before the SeqAlltoAll.
+        assert cfg.hp % hkv == 0, (cfg.hp, hkv)
+        rep = cfg.hp // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+
+    if cfg.hp > 1:
+        assert hq % cfg.hp == 0, (hq, cfg.hp)
+        q = lax.all_to_all(q, cfg.axis_hp, 2, 1, tiled=True)
+        k = lax.all_to_all(k, cfg.axis_hp, 2, 1, tiled=True)
+        v = lax.all_to_all(v, cfg.axis_hp, 2, 1, tiled=True)
+
+    if cfg.cp == 1:
+        out = flash_attention(q, k, v, causal=cfg.causal, window=cfg.window,
+                              softcap=cfg.softcap, scale=scale,
+                              impl=cfg.impl)
+    else:
+        rcfg = RingConfig(n_out=cfg.n_out, w=cfg.w, causal=cfg.causal,
+                          zigzag=cfg.zigzag and cfg.causal,
+                          window=cfg.window, softcap=cfg.softcap,
+                          scale=scale, impl=cfg.impl,
+                          axis_outer=cfg.axis_outer,
+                          axis_inner=cfg.axis_inner)
+        out = ring_attention(q, k, v, rcfg)
+
+    if cfg.hp > 1:
+        out = lax.all_to_all(out, cfg.axis_hp, 1, 2, tiled=True)
+    return out
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    try:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    except TypeError:  # older spelling
+        from jax.experimental.shard_map import shard_map as _sm
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
+
+
+def attention_2d(q, k, v, *, mesh, cfg: Attn2DConfig):
+    """Global-array 2D-Attention: q (B, S, Hq, d), k/v (B, S, Hkv, d).
+
+    B is sharded over the batch axes, S over the sp axes (the zigzag
+    data-layout contract — see data/pipeline.py).
+    """
+    spec = P(BATCH_AXES, SEQ_AXES, None, None)
+    f = _shard_map(functools.partial(attention_2d_local, cfg=cfg),
+                   mesh, (spec, spec, spec), spec)
+    return f(q, k, v)

@@ -1,0 +1,132 @@
+"""Mesh topology: the 5-axis LoongTrain mesh and device placement.
+
+Axes (canonical order): ``("pod", "data", "head", "outer", "inner")``
+
+* ``pod``    — cross-pod data parallelism (DCN-connected pods).
+* ``data``   — in-pod data parallelism.
+* ``head``   — head parallelism (d_hp); the Ulysses ``SeqAlltoAll`` group.
+* ``outer``  — outer ring of Double-Ring-Attention (d_cp / w groups).
+* ``inner``  — inner ring (w); ``d_cp = outer * inner``, ``d_sp = hp * cp``.
+
+Paper §4.4 placement strategies map to *which axis is minor (contiguous)*
+in the device array: on a TPU slice, contiguity in the mesh device order is
+ICI locality, the analogue of "colocated on a node".
+
+* head-first:    model axis reshaped ``(outer, inner, head)`` — head minor,
+                 so the SeqAlltoAll group is the most-local set of chips.
+* context-first: model axis reshaped ``(head, outer, inner)`` — inner minor,
+                 so the inner ring is the most-local set of chips.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+AXIS_POD = "pod"
+AXIS_DATA = "data"
+AXIS_HP = "head"
+AXIS_OUTER = "outer"
+AXIS_INNER = "inner"
+MESH_AXES = (AXIS_POD, AXIS_DATA, AXIS_HP, AXIS_OUTER, AXIS_INNER)
+
+#: Data-parallel axes (global batch is sharded over these).
+BATCH_AXES = (AXIS_POD, AXIS_DATA)
+#: Sequence-parallel axes, major-to-minor for the S dimension.  The order
+#: makes the head axis minor so that SeqAlltoAll's concat over head peers
+#: yields a contiguous S/d_cp block per context rank (see attention2d.py).
+SEQ_AXES = (AXIS_OUTER, AXIS_INNER, AXIS_HP)
+#: All non-batch axes — used for hybrid-ZeRO sharding of params/opt state.
+MODEL_AXES = (AXIS_HP, AXIS_OUTER, AXIS_INNER)
+ZERO_AXES = (AXIS_DATA,) + MODEL_AXES
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    """LoongTrain parallel layout.  d_sp = hp * cp_outer * cp_inner."""
+    dp: int = 1
+    hp: int = 1
+    cp_outer: int = 1
+    cp_inner: int = 1
+    pods: int = 1
+    placement: str = "head_first"      # or "context_first"
+
+    @property
+    def cp(self) -> int:
+        return self.cp_outer * self.cp_inner
+
+    @property
+    def sp(self) -> int:
+        return self.hp * self.cp
+
+    @property
+    def model_size(self) -> int:
+        return self.sp
+
+    @property
+    def num_devices(self) -> int:
+        return self.pods * self.dp * self.sp
+
+    def validate(self):
+        assert self.placement in ("head_first", "context_first"), self.placement
+        for v in (self.dp, self.hp, self.cp_outer, self.cp_inner, self.pods):
+            assert v >= 1
+
+
+def _reshape_model_axis(dev: np.ndarray, pc: ParallelConfig) -> np.ndarray:
+    """dev: (pods, dp, model) -> (pods, dp, hp, outer, inner)."""
+    pods, dp, model = dev.shape
+    assert model == pc.sp, (model, pc.sp)
+    if pc.placement == "head_first":
+        # head minor: SeqAlltoAll group gets ICI-adjacent chips.
+        d = dev.reshape(pods, dp, pc.cp_outer, pc.cp_inner, pc.hp)
+        return d.transpose(0, 1, 4, 2, 3)
+    # context-first: inner ring minor.
+    return dev.reshape(pods, dp, pc.hp, pc.cp_outer, pc.cp_inner)
+
+
+def refine_mesh(base: Mesh, pc: ParallelConfig) -> Mesh:
+    """Split a ``(data, model)`` / ``(pod, data, model)`` production mesh
+    into the 5-axis LoongTrain mesh without changing device order."""
+    pc.validate()
+    dev = base.devices
+    if dev.ndim == 2:
+        dev = dev[np.newaxis]
+    assert dev.ndim == 3, dev.shape
+    assert dev.shape[0] == pc.pods, (dev.shape, pc)
+    assert dev.shape[1] == pc.dp, (dev.shape, pc)
+    return Mesh(_reshape_model_axis(dev, pc), MESH_AXES)
+
+
+def make_mesh(pc: ParallelConfig, devices=None) -> Mesh:
+    """Build the 5-axis mesh directly from a flat device list (tests,
+    single-host runs)."""
+    pc.validate()
+    devices = list(jax.devices()) if devices is None else list(devices)
+    n = pc.num_devices
+    assert len(devices) >= n, (len(devices), n)
+    dev = np.array(devices[:n]).reshape(pc.pods, pc.dp, pc.sp)
+    return Mesh(_reshape_model_axis(dev, pc), MESH_AXES)
+
+
+def batch_spec(*trailing) -> P:
+    return P(BATCH_AXES, *trailing)
+
+
+def seq_sharded_spec(batch_first: bool = True, *trailing) -> P:
+    """Spec for an activation (B, S, ...) with S sharded over all sp axes."""
+    if batch_first:
+        return P(BATCH_AXES, SEQ_AXES, *trailing)
+    return P(SEQ_AXES, *trailing)
+
+
+def factor_cp(cp: int, inner: int | None = None) -> tuple[int, int]:
+    """Choose (outer, inner) for a given cp; default inner = min(cp, 4),
+    mirroring the paper's 'w = number of NICs' heuristic (ICI dim extent)."""
+    if inner is None:
+        inner = math.gcd(cp, 4)
+    assert cp % inner == 0, (cp, inner)
+    return cp // inner, inner

@@ -1,0 +1,88 @@
+"""Hybrid ZeRO (paper §5.1) as sharding rules over the dp × sp mesh.
+
+LoongTrain/AMSP insight: shard optimizer/parameter state not just over DP
+but over ``dp × sp``, with a *configurable* sharding extent trading memory
+against collective latency (Full-Replica / Partial- / Full-Sharding).
+
+JAX mapping: ZeRO is a *sharding spec* on the param / optimizer pytrees.
+XLA then emits exactly the ZeRO collectives: all-gather of params at use
+(ZeRO-3), reduce-scatter of grads into the sharded optimizer update
+(ZeRO-1/2).  ``zero_shardings`` picks, per leaf, the largest tensor dim
+divisible by the sharding-group size; leaves too small to shard stay
+replicated (their memory is negligible by construction).
+
+Sharding never crosses the ``pod`` axis by default — cross-pod gathers
+would traverse DCN (AMSP's Partial-Sharding; override with
+``include_pod=True``).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.topology import (AXIS_DATA, AXIS_HP, AXIS_INNER, AXIS_OUTER,
+                                 AXIS_POD)
+
+#: preference-ordered sharding groups (AMSP: full > partial > replica)
+_DEFAULT_GROUPS = (
+    (AXIS_DATA, AXIS_HP, AXIS_OUTER, AXIS_INNER),   # full dp×sp sharding
+    (AXIS_HP, AXIS_OUTER, AXIS_INNER),              # sp-only
+    (AXIS_DATA,),                                   # dp-only
+)
+
+
+def _group_size(mesh: Mesh, group) -> int:
+    return int(np.prod([mesh.shape[a] for a in group]))
+
+
+def leaf_spec(shape, mesh: Mesh, groups=_DEFAULT_GROUPS,
+              min_elems: int = 2 ** 12) -> P:
+    """Pick a PartitionSpec for one param leaf."""
+    if np.prod(shape, dtype=np.int64) < min_elems:
+        return P()
+    for group in groups:
+        g = _group_size(mesh, group)
+        if g <= 1:
+            continue
+        # largest dim divisible by the group size wins
+        cands = [(d, s) for d, s in enumerate(shape) if s % g == 0 and s >= g]
+        if not cands:
+            continue
+        dim = max(cands, key=lambda t: t[1])[0]
+        spec = [None] * len(shape)
+        spec[dim] = group
+        return P(*spec)
+    return P()
+
+
+def zero_shardings(params, mesh: Mesh, *, include_pod: bool = False,
+                   zero_axes=None):
+    """NamedSharding pytree for params (and, reused, optimizer moments)."""
+    groups = _DEFAULT_GROUPS
+    if zero_axes is not None:
+        groups = (tuple(zero_axes),) + _DEFAULT_GROUPS
+    if include_pod:
+        groups = ((AXIS_POD,) + _DEFAULT_GROUPS[0],) + groups
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, leaf_spec(x.shape, mesh, groups)),
+        params)
+
+
+def replicated_shardings(params, mesh: Mesh):
+    """Full-Replica mode (ZeRO off) — small models / debugging."""
+    return jax.tree.map(lambda x: NamedSharding(mesh, P()), params)
+
+
+def tp_shardings(params, mesh: Mesh):
+    """Weight-stationary (tensor-parallel-style) shardings for serving.
+
+    Weights shard 16-way over the model axes only and are *never gathered*:
+    with decode's tiny activations, GSPMD moves the (small) activations
+    through psum/all-gather instead of moving the (huge) weights — the
+    standard inference-TP layout.  Replicated across data (a serving
+    replica per data rank)."""
+    groups = ((AXIS_HP, AXIS_OUTER, AXIS_INNER),)
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, leaf_spec(x.shape, mesh, groups)),
+        params)

@@ -1,0 +1,64 @@
+"""Zigzag sequence layout for causal load balance (paper §2.3/§4.4).
+
+Context rank ``r`` of ``cp`` owns the logical chunks ``(r, 2cp-1-r)`` so
+that every ring step performs the same amount of unmasked work.  The data
+pipeline permutes tokens/labels/positions once per batch (the paper's
+"post-processing function within the data loader"); attention masks inside
+the ring are expressed in logical chunk ids (see attention2d.py).
+
+``physical`` order = what lives contiguously in the sharded S dimension;
+``logical`` order = real token order.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.lru_cache(maxsize=None)
+def zigzag_indices(s: int, cp: int) -> np.ndarray:
+    """perm[physical_pos] = logical_pos  (length S)."""
+    if cp == 1:
+        return np.arange(s)
+    assert s % (2 * cp) == 0, (s, cp)
+    c = s // (2 * cp)
+    out = np.empty(s, dtype=np.int64)
+    for r in range(cp):
+        lo = r * c
+        hi = (2 * cp - 1 - r) * c
+        base = r * 2 * c
+        out[base:base + c] = np.arange(lo, lo + c)
+        out[base + c:base + 2 * c] = np.arange(hi, hi + c)
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def zigzag_inverse(s: int, cp: int) -> np.ndarray:
+    """inv[logical_pos] = physical_pos."""
+    idx = zigzag_indices(s, cp)
+    inv = np.empty_like(idx)
+    inv[idx] = np.arange(s)
+    return inv
+
+
+def to_zigzag(x, cp: int, axis: int = 1):
+    """Logical -> physical layout along ``axis``."""
+    if cp == 1:
+        return x
+    return jnp.take(x, jnp.asarray(zigzag_indices(x.shape[axis], cp)),
+                    axis=axis)
+
+
+def from_zigzag(x, cp: int, axis: int = 1):
+    """Physical -> logical layout along ``axis``."""
+    if cp == 1:
+        return x
+    return jnp.take(x, jnp.asarray(zigzag_inverse(x.shape[axis], cp)),
+                    axis=axis)
+
+
+def zigzag_position_ids(s: int, cp: int) -> np.ndarray:
+    """Logical position of every physical slot (for rotary embeddings)."""
+    return zigzag_indices(s, cp)

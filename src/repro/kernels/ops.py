@@ -1,0 +1,200 @@
+"""Public attention ops: impl dispatch, layout/padding plumbing.
+
+Three entry points:
+
+* ``flash_attention``          — differentiable single-call attention
+                                 (custom_vjp Pallas path or jnp ref path).
+* ``flash_fwd_chunk``          — non-differentiable (out, lse) for one KV
+                                 chunk; the ring-attention building block.
+* ``flash_bwd_chunk``          — chunk backward given global (out, lse).
+
+Layout everywhere: ``q (B, Lq, Hq, D)``, ``k/v (B, Lk, Hkv, D)``.
+
+``impl``:
+* ``"auto"``             — Pallas on TPU, ref elsewhere (CPU dry-run/compile
+                            keeps attention as plain einsums XLA can cost).
+* ``"pallas"``           — compiled Pallas kernel (TPU).
+* ``"pallas_interpret"`` — Pallas kernel body interpreted on CPU (tests).
+* ``"ref"``              — pure-jnp oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_mod
+from repro.kernels.flash_attention import (FlashParams, _flash_folded,
+                                           _fwd, _bwd)
+
+NEG_INF = ref_mod.NEG_INF
+
+
+def resolve_impl(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "flashref"
+    return impl
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _fold_pad(x, block_l: int, d_pad: int):
+    """(B, L, H, D) -> (B*H, L_pad, D_pad)."""
+    b, l, h, d = x.shape
+    x = jnp.transpose(x, (0, 2, 1, 3)).reshape(b * h, l, d)
+    l_pad = _round_up(l, block_l)
+    if l_pad != l or d_pad != d:
+        x = jnp.pad(x, ((0, 0), (0, l_pad - l), (0, d_pad - d)))
+    return x
+
+
+def _unfold(x, b: int, h: int, l: int, d: int):
+    """(B*H, L_pad, D_pad) -> (B, L, H, D)."""
+    x = x[:, :l, :d].reshape(b, h, l, d)
+    return jnp.transpose(x, (0, 2, 1, 3))
+
+
+def _make_params(q, k, *, causal, window, softcap, scale, kv_valid_len,
+                 block_q, block_k, interpret):
+    _, lq, _, d = q.shape
+    _, lk, _, _ = k.shape
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    bq = min(block_q, _round_up(lq, 8))
+    bk = min(block_k, _round_up(lk, 8))
+    lk_valid = lk if kv_valid_len is None else kv_valid_len
+    return FlashParams(causal=causal, window=window, softcap=float(softcap),
+                       scale=float(scale), lq_valid=int(lq),
+                       lk_valid=int(lk_valid),
+                       block_q=bq, block_k=bk, interpret=interpret), bq, bk
+
+
+def flash_attention(q, k, v, *, causal: bool = False,
+                    window: int | None = None, softcap: float = 0.0,
+                    scale: float | None = None,
+                    kv_valid_len: int | None = None,
+                    impl: str = "auto",
+                    block_q: int = 128, block_k: int = 128):
+    """Differentiable attention.  Returns out (B, Lq, Hq, D)."""
+    impl = resolve_impl(impl)
+    if impl == "flashref":
+        out, _ = ref_mod.attention_ref_chunked(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            scale=scale, kv_valid_len=kv_valid_len)
+        return out
+    if impl == "ref":
+        out, _ = ref_mod.attention_ref(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            scale=scale, kv_valid_len=kv_valid_len)
+        return out
+    interpret = impl == "pallas_interpret"
+    b, lq, hq, d = q.shape
+    _, lk, hkv, _ = k.shape
+    p, bq, bk = _make_params(q, k, causal=causal, window=window,
+                             softcap=softcap, scale=scale,
+                             kv_valid_len=kv_valid_len, block_q=block_q,
+                             block_k=block_k, interpret=interpret)
+    d_pad = _round_up(d, 128)
+    qf = _fold_pad(q, bq, d_pad)
+    kf = _fold_pad(k, bk, d_pad)
+    vf = _fold_pad(v, bk, d_pad)
+    out = _flash_folded(qf, kf, vf, p)
+    return _unfold(out, b, hq, lq, d)
+
+
+def flash_fwd_chunk(q, k, v, *, causal: bool = False,
+                    window: int | None = None, softcap: float = 0.0,
+                    scale: float | None = None,
+                    kv_valid_len: int | None = None,
+                    mask_offset=None,
+                    impl: str = "auto",
+                    block_q: int = 128, block_k: int = 128):
+    """Non-differentiable (out, lse) — ring / decode building block.
+
+    out (B, Lq, Hq, D);  lse (B, Hq, Lq) fp32.
+
+    ``mask_offset`` (possibly traced) forces the jnp path — the Pallas
+    kernel's block-skip logic needs static offsets.
+    """
+    impl = resolve_impl(impl)
+    if mask_offset is not None and impl == "pallas":
+        impl = "flashref"
+    if impl == "flashref":
+        return ref_mod.attention_ref_chunked(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            scale=scale, kv_valid_len=kv_valid_len, mask_offset=mask_offset)
+    if impl == "ref":
+        return ref_mod.attention_ref(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            scale=scale, kv_valid_len=kv_valid_len, mask_offset=mask_offset)
+    interpret = impl == "pallas_interpret"
+    b, lq, hq, d = q.shape
+    _, lk, hkv, _ = k.shape
+    p, bq, bk = _make_params(q, k, causal=causal, window=window,
+                             softcap=softcap, scale=scale,
+                             kv_valid_len=kv_valid_len, block_q=block_q,
+                             block_k=block_k, interpret=interpret)
+    d_pad = _round_up(d, 128)
+    qf = _fold_pad(q, bq, d_pad)
+    kf = _fold_pad(k, bk, d_pad)
+    vf = _fold_pad(v, bk, d_pad)
+    out, lse = _fwd(qf, kf, vf, p)
+    out = _unfold(out, b, hq, lq, d)
+    lse = lse[:, :lq].reshape(b, hq, lq)
+    return out, lse
+
+
+def flash_bwd_chunk(q, k, v, out, lse, do, *, causal: bool = False,
+                    window: int | None = None, softcap: float = 0.0,
+                    scale: float | None = None,
+                    kv_valid_len: int | None = None,
+                    mask_offset=None,
+                    impl: str = "auto",
+                    block_q: int = 128, block_k: int = 128):
+    """Chunk backward given global (out, lse).  Returns (dq, dk, dv)."""
+    impl = resolve_impl(impl)
+    if mask_offset is not None and impl == "pallas":
+        impl = "flashref"
+    if impl == "flashref":
+        return ref_mod.attention_bwd_ref_chunked(
+            q, k, v, out, lse, do, causal=causal, window=window,
+            softcap=softcap, scale=scale, kv_valid_len=kv_valid_len,
+            mask_offset=mask_offset)
+    if impl == "ref":
+        return ref_mod.attention_bwd_ref(
+            q, k, v, out, lse, do, causal=causal, window=window,
+            softcap=softcap, scale=scale, kv_valid_len=kv_valid_len,
+            mask_offset=mask_offset)
+    interpret = impl == "pallas_interpret"
+    b, lq, hq, d = q.shape
+    _, lk, hkv, _ = k.shape
+    p, bq, bk = _make_params(q, k, causal=causal, window=window,
+                             softcap=softcap, scale=scale,
+                             kv_valid_len=kv_valid_len, block_q=block_q,
+                             block_k=block_k, interpret=interpret)
+    d_pad = _round_up(d, 128)
+    group = hq // hkv
+    qf = _fold_pad(q, bq, d_pad)
+    kf = _fold_pad(jnp.repeat(k, group, axis=2) if group > 1 else k,
+                   bk, d_pad)
+    vf = _fold_pad(jnp.repeat(v, group, axis=2) if group > 1 else v,
+                   bk, d_pad)
+    outf = _fold_pad(out, bq, d_pad)
+    dof = _fold_pad(do, bq, d_pad)
+    lq_pad = qf.shape[1]
+    lsef = lse.reshape(b * hq, lq)
+    if lq_pad != lq:
+        lsef = jnp.pad(lsef, ((0, 0), (0, lq_pad - lq)))
+    dqf, dkf, dvf = _bwd(qf, kf, vf, outf, lsef, dof, p)
+    dq = _unfold(dqf, b, hq, lq, d)
+    dk_exp = _unfold(dkf, b, hq, lk, d)
+    dv_exp = _unfold(dvf, b, hq, lk, d)
+    if group > 1:
+        dk = dk_exp.reshape(b, lk, hkv, group, d).sum(axis=3).astype(k.dtype)
+        dv = dv_exp.reshape(b, lk, hkv, group, d).sum(axis=3).astype(v.dtype)
+    else:
+        dk, dv = dk_exp, dv_exp
+    return dq, dk, dv

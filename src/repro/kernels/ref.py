@@ -1,0 +1,255 @@
+"""Pure-jnp oracle for blockwise (flash) attention.
+
+This is the correctness reference for the Pallas TPU kernel
+(`flash_attention.py`) and the building block the distributed 2D-Attention
+tests compare against.  Everything computes in fp32 regardless of input
+dtype.
+
+Conventions
+-----------
+* Layout: ``q: (B, Lq, Hq, D)``, ``k/v: (B, Lk, Hkv, D)`` with
+  ``Hq % Hkv == 0`` (GQA).
+* ``causal=True`` means *bottom-right aligned* causal: query row ``i`` may
+  attend key column ``j`` iff ``j <= i + (Lk - Lq)``.  For ``Lq == Lk`` this
+  is the standard causal mask; for ring-attention partial blocks it encodes
+  "this KV chunk ends where the Q chunk ends".
+* ``window`` (sliding-window / local attention): additionally require
+  ``j >= i + (Lk - Lq) - window + 1``.
+* ``softcap``: Gemma-2 style logit soft-capping ``cap * tanh(s / cap)``.
+* Returns ``(out, lse)`` where ``lse[b, h, i] = logsumexp_j(scores)`` in
+  fp32; rows with no visible key get ``lse = -inf`` and ``out = 0``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _build_mask(lq: int, lk: int, *, causal: bool, window: int | None,
+                kv_valid_len: int | None,
+                mask_offset=None) -> jax.Array | None:
+    """Boolean (Lq, Lk) visibility mask, or None if everything is visible.
+
+    ``mask_offset`` overrides the bottom-right alignment delta ``lk - lq``;
+    it may be a traced scalar (ring attention passes the *logical* chunk
+    distance, which is rank-dependent under SPMD).
+    """
+    if not causal and window is None and kv_valid_len is None:
+        return None
+    qi = jnp.arange(lq)[:, None]
+    kj = jnp.arange(lk)[None, :]
+    delta = (lk - lq) if mask_offset is None else mask_offset
+    mask = jnp.ones((lq, lk), dtype=bool)
+    if causal:
+        mask &= kj <= qi + delta
+    if window is not None:
+        mask &= kj >= qi + delta - (window - 1)
+    if kv_valid_len is not None:
+        mask &= kj < kv_valid_len
+    return mask
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = False, window: int | None = None,
+                  softcap: float = 0.0, scale: float | None = None,
+                  kv_valid_len: int | None = None,
+                  mask_offset=None,
+                  bias: jax.Array | None = None):
+    """Dense fp32 attention oracle.  Returns (out, lse).
+
+    out: (B, Lq, Hq, D) in q.dtype;  lse: (B, Hq, Lq) fp32.
+    """
+    b, lq, hq, d = q.shape
+    _, lk, hkv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    group = hq // hkv
+    if group > 1:
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+
+    # Score/probability tensors materialize in the *input* dtype: on real
+    # TPUs the Pallas kernel keeps them in VMEM (zero HBM traffic), so the
+    # bf16 lowering is the closer stand-in for bf16 models; reductions and
+    # the returned lse stay fp32.  fp32 inputs keep full-fp32 math (tests).
+    sdt = q.dtype if q.dtype != jnp.float64 else jnp.float32
+    s = jnp.einsum("bihd,bjhd->bihj", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    if bias is not None:
+        s = s + jnp.transpose(bias.astype(jnp.float32), (0, 2, 1, 3))
+    mask = _build_mask(lq, lk, causal=causal, window=window,
+                       kv_valid_len=kv_valid_len, mask_offset=mask_offset)
+    if mask is not None:
+        s = jnp.where(mask[None, :, None], s, NEG_INF)
+
+    m = jnp.max(s, axis=-1)                      # (B, Lq, H)
+    m_safe = jnp.where(m <= NEG_INF / 2, 0.0, m)
+    p = jnp.exp(s - m_safe[..., None]).astype(sdt)
+    if mask is not None:
+        p = jnp.where(mask[None, :, None], p, 0)
+    l = jnp.sum(p.astype(jnp.float32), axis=-1)  # (B, Lq, H)
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    out = jnp.einsum("bihj,bjhd->bihd", p, v,
+                     preferred_element_type=jnp.float32)
+    out = out / l_safe[..., None]
+    lse = jnp.where(l == 0.0, NEG_INF, m_safe + jnp.log(l_safe))
+    return (out.astype(q.dtype),
+            jnp.transpose(lse, (0, 2, 1)))
+
+
+def attention_bwd_ref(q, k, v, out, lse, do, *,
+                      causal: bool = False, window: int | None = None,
+                      softcap: float = 0.0, scale: float | None = None,
+                      kv_valid_len: int | None = None,
+                      mask_offset=None):
+    """Chunk-level attention backward given *global* (out, lse).
+
+    This is the ring-attention backward building block: ``lse``/``out`` are
+    the final combined values over the union of all KV chunks, while
+    ``k``/``v`` are one visiting chunk; the returned ``dk``/``dv`` are that
+    chunk's contributions and ``dq`` is the partial dq to accumulate.
+
+    Shapes: q (B,Lq,Hq,D), k/v (B,Lk,Hkv,D), out/do (B,Lq,Hq,D),
+    lse (B,Hq,Lq).  Returns (dq, dk, dv) in input dtypes.
+    """
+    b, lq, hq, d = q.shape
+    _, lk, hkv, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    kf = jnp.repeat(k, group, axis=2).astype(jnp.float32) if group > 1 \
+        else k.astype(jnp.float32)
+    vf = jnp.repeat(v, group, axis=2).astype(jnp.float32) if group > 1 \
+        else v.astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    dof = do.astype(jnp.float32)
+    outf = out.astype(jnp.float32)
+
+    s_raw = jnp.einsum("bihd,bjhd->bhij", qf, kf) * scale
+    s = softcap * jnp.tanh(s_raw / softcap) if softcap else s_raw
+    mask = _build_mask(lq, lk, causal=causal, window=window,
+                       kv_valid_len=kv_valid_len, mask_offset=mask_offset)
+    shift = jnp.where(lse <= NEG_INF / 2, 0.0, lse)      # (B,H,Lq)
+    p = jnp.exp(s - shift[..., None])
+    if mask is not None:
+        p = jnp.where(mask[None, None], p, 0.0)
+    dsum = jnp.sum(dof * outf, axis=-1)                  # (B,Lq,H)
+    dsum = jnp.transpose(dsum, (0, 2, 1))                # (B,H,Lq)
+    dp = jnp.einsum("bihd,bjhd->bhij", dof, vf)
+    ds = p * (dp - dsum[..., None])
+    if softcap:
+        ds = ds * (1.0 - (s / softcap) ** 2)
+    ds = ds * scale
+    dq = jnp.einsum("bhij,bjhd->bihd", ds, kf)
+    dk_exp = jnp.einsum("bhij,bihd->bjhd", ds, qf)
+    dv_exp = jnp.einsum("bhij,bihd->bjhd", p, dof)
+    if group > 1:
+        dk = dk_exp.reshape(b, lk, hkv, group, d).sum(axis=3)
+        dv = dv_exp.reshape(b, lk, hkv, group, d).sum(axis=3)
+    else:
+        dk, dv = dk_exp, dv_exp
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+def combine_attention(parts):
+    """LSE-weighted combine of partial attention results.
+
+    ``parts``: iterable of ``(out, lse)`` with out (B, L, H, D),
+    lse (B, H, L).  Each part must be the softmax-normalized attention over a
+    disjoint subset of keys together with its logsumexp.  Returns the exact
+    attention over the union — the update rule of ring attention /
+    flash-decoding.
+    """
+    parts = list(parts)
+    outs = jnp.stack([p[0].astype(jnp.float32) for p in parts])   # (N,B,L,H,D)
+    lses = jnp.stack([p[1] for p in parts])                       # (N,B,H,L)
+    m = jnp.max(lses, axis=0)                                     # (B,H,L)
+    m_safe = jnp.where(m <= NEG_INF / 2, 0.0, m)
+    w = jnp.exp(lses - m_safe[None])                              # (N,B,H,L)
+    w = jnp.where(lses <= NEG_INF / 2, 0.0, w)
+    denom = jnp.sum(w, axis=0)                                    # (B,H,L)
+    denom_safe = jnp.where(denom == 0.0, 1.0, denom)
+    # (N,B,H,L) -> weights aligned to out layout (N,B,L,H,1)
+    w_o = jnp.transpose(w, (0, 1, 3, 2))[..., None]
+    out = jnp.sum(outs * w_o, axis=0) / jnp.transpose(
+        denom_safe, (0, 2, 1))[..., None]
+    lse = jnp.where(denom == 0.0, NEG_INF, m_safe + jnp.log(denom_safe))
+    return out.astype(parts[0][0].dtype), lse
+
+
+def combine_pair(out_a, lse_a, out_b, lse_b):
+    """Two-way combine (the in-loop ring update)."""
+    return combine_attention([(out_a, lse_a), (out_b, lse_b)])
+
+
+def _chunked(fn, lq: int, q_chunk: int):
+    """Static q-chunk bounds (python-unrolled => exact cost accounting)."""
+    q_chunk = max(1, min(q_chunk, lq))
+    bounds = list(range(0, lq, q_chunk))
+    return bounds, q_chunk
+
+
+def attention_ref_chunked(q, k, v, *, causal=False, window=None,
+                          softcap=0.0, scale=None, kv_valid_len=None,
+                          mask_offset=None, q_chunk: int = 1024):
+    """Flash-semantics lowering of the oracle: scores materialize only per
+    q-chunk (O(q_chunk × Lk)), matching what the Pallas kernel does in
+    VMEM.  Python-unrolled so compiled FLOPs/bytes are exact.
+
+    Numerically identical to attention_ref (same fp32 softmax math).
+    """
+    b, lq, hq, d = q.shape
+    bounds, q_chunk = _chunked(None, lq, q_chunk)
+    if len(bounds) == 1:
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap, scale=scale,
+                             kv_valid_len=kv_valid_len,
+                             mask_offset=mask_offset)
+    lk = k.shape[1]
+    base = (lk - lq) if mask_offset is None else mask_offset
+    outs, lses = [], []
+    for q0 in bounds:
+        qc = q[:, q0:q0 + q_chunk]
+        o, l = attention_ref(qc, k, v, causal=causal, window=window,
+                             softcap=softcap, scale=scale,
+                             kv_valid_len=kv_valid_len,
+                             mask_offset=base + q0)
+        outs.append(o)
+        lses.append(l)
+    return (jnp.concatenate(outs, axis=1),
+            jnp.concatenate(lses, axis=2))
+
+
+def attention_bwd_ref_chunked(q, k, v, out, lse, do, *, causal=False,
+                              window=None, softcap=0.0, scale=None,
+                              kv_valid_len=None, mask_offset=None,
+                              q_chunk: int = 1024):
+    """q-chunked chunk-backward; dk/dv accumulate in fp32."""
+    b, lq, hq, d = q.shape
+    bounds, q_chunk = _chunked(None, lq, q_chunk)
+    if len(bounds) == 1:
+        return attention_bwd_ref(q, k, v, out, lse, do, causal=causal,
+                                 window=window, softcap=softcap,
+                                 scale=scale, kv_valid_len=kv_valid_len,
+                                 mask_offset=mask_offset)
+    lk = k.shape[1]
+    base = (lk - lq) if mask_offset is None else mask_offset
+    dqs = []
+    dk = jnp.zeros(k.shape, jnp.float32)
+    dv = jnp.zeros(v.shape, jnp.float32)
+    for q0 in bounds:
+        sl = slice(q0, q0 + q_chunk)
+        dq_c, dk_c, dv_c = attention_bwd_ref(
+            q[:, sl], k, v, out[:, sl], lse[:, :, sl], do[:, sl],
+            causal=causal, window=window, softcap=softcap, scale=scale,
+            kv_valid_len=kv_valid_len, mask_offset=base + q0)
+        dqs.append(dq_c)
+        dk = dk + dk_c.astype(jnp.float32)
+        dv = dv + dv_c.astype(jnp.float32)
+    return (jnp.concatenate(dqs, axis=1), dk.astype(k.dtype),
+            dv.astype(v.dtype))

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is the canonical entry: a 16×16 pod (256 chips) or
+a 2×16×16 two-pod slice (512 chips).  It is a *function* so importing this
+module never touches jax device state.
+
+``production_runtime`` refines the production mesh into the 5-axis
+LoongTrain mesh (pod, data, head, outer, inner) for a given ParallelConfig
+without changing device order — placement (head-first vs context-first)
+decides which sub-axis is ICI-minor (see core/topology.py).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.runtime import Runtime
+from repro.core.topology import BATCH_AXES, ParallelConfig, refine_mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def production_runtime(pc: ParallelConfig, *, multi_pod: bool = False,
+                       impl: str = "auto",
+                       batch_shardable: bool = True) -> Runtime:
+    base = make_production_mesh(multi_pod=multi_pod)
+    mesh = refine_mesh(base, pc)
+    return Runtime(mesh=mesh, pc=pc, impl=impl,
+                   batch_axes=BATCH_AXES if batch_shardable else ())

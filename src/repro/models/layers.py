@@ -1,0 +1,163 @@
+"""Layer zoo: norms, rotary, MLPs, embeddings.
+
+Pure-functional style: ``init_*`` builds a param dict, ``*_apply`` consumes
+it.  Params are stored fp32; compute casts to ``dtype`` at the call site.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _normal(key, shape, std):
+    return (std * jax.random.normal(key, shape)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim: int):
+    return {"w": jnp.zeros((dim,), jnp.float32)}
+
+
+def rmsnorm_apply(p, x, *, eps: float = 1e-6, gemma_style: bool = True):
+    """RMSNorm with (1 + w) scaling (zeros-init w == identity scale).
+
+    ``gemma_style`` keeps the normalization in fp32 (all our archs do).
+    """
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    return (xf * (1.0 + p["w"].astype(jnp.float32))).astype(dt)
+
+
+def layernorm_nonparametric(x, *, eps: float = 1e-5):
+    """OLMo-style non-parametric LayerNorm (no scale/bias)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(dt)
+
+
+def init_layernorm(dim: int):
+    return {"w": jnp.ones((dim,), jnp.float32),
+            "b": jnp.zeros((dim,), jnp.float32)}
+
+
+def layernorm_apply(p, x, *, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xf * p["w"] + p["b"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Linear / Embedding
+# ---------------------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
+                std: float | None = None):
+    std = std if std is not None else d_in ** -0.5
+    p = {"w": _normal(key, (d_in, d_out), std)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def linear_apply(p, x):
+    w = p["w"].astype(x.dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_embedding(key, vocab: int, dim: int, *, std: float = 0.02):
+    return {"table": _normal(key, (vocab, dim), std)}
+
+
+def embedding_apply(p, ids, *, dtype, scale: float | None = None):
+    out = jnp.take(p["table"], ids, axis=0).astype(dtype)
+    if scale is not None:
+        out = out * jnp.asarray(scale, dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rotary
+# ---------------------------------------------------------------------------
+
+def rotary_cos_sin(positions, head_dim: int, *, theta: float = 10000.0,
+                   dtype=jnp.float32):
+    """positions: (..., S) int -> cos/sin (..., S, head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half) * 2.0 / head_dim))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rotary(x, cos, sin):
+    """x: (B, S, H, D); cos/sin (B, S, D/2) — pairs-as-halves convention."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(
+        jnp.float32)
+    c = cos[:, :, None, :].astype(jnp.float32)
+    s = sin[:, :, None, :].astype(jnp.float32)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(dt)
+
+
+def sinusoid_positions(s: int, dim: int, dtype=jnp.float32):
+    """Whisper-style sinusoidal position embedding (S, D)."""
+    half = dim // 2
+    scale = np.log(10000.0) / max(half - 1, 1)
+    freqs = np.exp(-scale * np.arange(half))
+    ang = np.arange(s)[:, None] * freqs[None, :]
+    return jnp.asarray(np.concatenate([np.sin(ang), np.cos(ang)], axis=1),
+                       dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_glu_mlp(key, d_model: int, d_ff: int):
+    """SwiGLU/GeGLU family: W2(act(W1 x) * W3 x)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w1": init_linear(k1, d_model, d_ff),
+            "w3": init_linear(k2, d_model, d_ff),
+            "w2": init_linear(k3, d_ff, d_model)}
+
+
+def glu_mlp_apply(p, x, *, act: str = "silu"):
+    h = linear_apply(p["w1"], x)
+    if act == "silu":
+        h = jax.nn.silu(h)
+    elif act == "gelu":
+        h = jax.nn.gelu(h, approximate=True)
+    else:
+        raise ValueError(act)
+    return linear_apply(p["w2"], h * linear_apply(p["w3"], x))
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int, *, bias: bool = True):
+    """Plain 2-matmul GELU MLP (Whisper)."""
+    k1, k2 = jax.random.split(key)
+    return {"fc1": init_linear(k1, d_model, d_ff, bias=bias),
+            "fc2": init_linear(k2, d_ff, d_model, bias=bias)}
+
+
+def gelu_mlp_apply(p, x):
+    return linear_apply(p["fc2"], jax.nn.gelu(linear_apply(p["fc1"], x),
+                                              approximate=True))
+
+
+def softcap(x, cap: float):
+    return cap * jnp.tanh(x / cap) if cap else x

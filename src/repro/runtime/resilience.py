@@ -1,0 +1,114 @@
+"""Fleet resilience: straggler detection, preemption handling, elastic plan.
+
+At thousands of nodes the dominant failure modes are (a) hard node loss,
+(b) slow nodes (thermal throttling, ECC retries, flaky ICI links), and
+(c) planned preemption.  The JAX/SPMD answer:
+
+* hard loss      -> checkpoint/restart (runtime/checkpoint.py) with
+                    deterministic data skip (data/pipeline.py) — training is
+                    bitwise-resumable from (checkpoint, step index);
+* stragglers     -> there is no per-rank work-stealing inside one SPMD step;
+                    detection + replacement is the lever.  ``StepMonitor``
+                    keeps a robust per-step-time EWMA and flags outliers so
+                    the fleet controller can drain/swap the slow host and
+                    resume from the last checkpoint;
+* preemption     -> ``PreemptionGuard`` traps SIGTERM, the trainer flushes a
+                    final checkpoint at the next step boundary;
+* elastic rescale-> checkpoints are mesh-independent (host numpy + target
+                    shardings on restore), so N->M chips is restore-time
+                    resharding; ``elastic_plan`` picks a valid
+                    ParallelConfig for a new chip count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+
+import numpy as np
+
+from repro.core.topology import ParallelConfig
+
+
+class StepMonitor:
+    """Robust step-time tracker with straggler/outlier flagging."""
+
+    def __init__(self, window: int = 50, threshold: float = 1.5):
+        self.window = window
+        self.threshold = threshold
+        self.times: list[float] = []
+        self.flagged: list[tuple[int, float, float]] = []
+        self._t0 = None
+        self._step = 0
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self):
+        assert self._t0 is not None
+        dt = time.perf_counter() - self._t0
+        self._t0 = None
+        self._step += 1
+        self.record(self._step, dt)
+        return dt
+
+    def record(self, step: int, dt: float):
+        hist = self.times[-self.window:]
+        if len(hist) >= 8:
+            med = float(np.median(hist))
+            if dt > self.threshold * med:
+                self.flagged.append((step, dt, med))
+        self.times.append(dt)
+
+    @property
+    def median(self) -> float:
+        return float(np.median(self.times[-self.window:])) if self.times \
+            else 0.0
+
+    def report(self) -> dict:
+        return {"steps": len(self.times), "median_s": self.median,
+                "stragglers": list(self.flagged)}
+
+
+class PreemptionGuard:
+    """SIGTERM/SIGINT-triggered graceful-shutdown flag."""
+
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self.requested = False
+        self._installed = False
+        self._signals = signals
+
+    def install(self):
+        if self._installed:
+            return
+        for s in self._signals:
+            try:
+                signal.signal(s, self._handler)
+            except ValueError:
+                pass  # not in main thread (tests)
+        self._installed = True
+
+    def _handler(self, signum, frame):
+        self.requested = True
+
+
+def elastic_plan(n_chips: int, *, kv_heads: int, n_heads: int,
+                 placement: str = "head_first") -> ParallelConfig:
+    """Pick a ParallelConfig for an arbitrary healthy-chip count.
+
+    Keeps the model (sp) extent at 16 where possible (so restored shardings
+    stay compatible) and soaks chip-count changes into dp — the standard
+    elastic move: lose a node, shrink dp, keep per-chip memory identical.
+    """
+    sp = 16
+    while sp > 1 and (n_chips % sp or n_heads % min(sp, 8)):
+        sp //= 2
+    dp = max(n_chips // sp, 1)
+    hp = min(kv_heads, sp, 8)
+    while sp % hp or n_heads % hp:
+        hp //= 2
+    hp = max(hp, 1)
+    cp = sp // hp
+    inner = min(cp, 4)
+    return ParallelConfig(dp=dp, hp=hp, cp_outer=cp // inner, cp_inner=inner,
+                          placement=placement)

@@ -1,0 +1,93 @@
+"""End-to-end trainer: data -> jitted step -> metrics, with checkpointing,
+preemption flush, deterministic resume, and straggler monitoring."""
+from __future__ import annotations
+
+import dataclasses
+import logging
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.runtime import Runtime
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.model import ModelConfig, init_params
+from repro.runtime import checkpoint as ckpt
+from repro.runtime.resilience import PreemptionGuard, StepMonitor
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.train_step import jit_train_step
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    num_steps: int = 100
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, rt: Runtime, opt_cfg: OptConfig,
+                 data_cfg: DataConfig, tcfg: TrainerConfig):
+        self.cfg, self.rt, self.tcfg = cfg, rt, tcfg
+        self.data = SyntheticLM(data_cfg, cfg)
+        self.monitor = StepMonitor()
+        self.guard = PreemptionGuard()
+        self.guard.install()
+
+        with rt.mesh:
+            params = init_params(cfg, jax.random.PRNGKey(tcfg.seed))
+            self.step_fn, self.p_sh, self.o_sh = jit_train_step(
+                cfg, rt, opt_cfg, params)
+            self.params = jax.device_put(params, self.p_sh)
+            self.opt_state = jax.device_put(init_opt_state(params),
+                                            self.o_sh)
+        self.start_step = 0
+        self.ckpter = None
+        if tcfg.ckpt_dir:
+            self.ckpter = ckpt.AsyncCheckpointer(tcfg.ckpt_dir)
+            last = ckpt.latest_step(tcfg.ckpt_dir)
+            if last is not None:
+                self.restore(last)
+
+    def restore(self, step: int):
+        state = {"params": self.params, "opt": self.opt_state}
+        shardings = {"params": self.p_sh, "opt": self.o_sh}
+        (state, _) = ckpt.restore(state, self.tcfg.ckpt_dir, step=step,
+                                  shardings=shardings)
+        self.params, self.opt_state = state["params"], state["opt"]
+        self.start_step = step
+        log.info("restored checkpoint at step %d", step)
+
+    def save(self, step: int):
+        if self.ckpter is None:
+            return
+        self.ckpter.save_async({"params": self.params,
+                                "opt": self.opt_state}, step)
+
+    def run(self):
+        losses = []
+        with self.rt.mesh:
+            for step in range(self.start_step, self.tcfg.num_steps):
+                batch = self.data.batch(step)
+                self.monitor.start()
+                self.params, self.opt_state, metrics = self.step_fn(
+                    self.params, self.opt_state, batch)
+                loss = float(metrics["loss"])
+                self.monitor.stop()
+                losses.append(loss)
+                if step % self.tcfg.log_every == 0:
+                    log.info("step %d loss %.4f gnorm %.3f (%.2fs/step)",
+                             step, loss, float(metrics["grad_norm"]),
+                             self.monitor.median)
+                if self.ckpter and (step + 1) % self.tcfg.ckpt_every == 0:
+                    self.save(step + 1)
+                if self.guard.requested:
+                    log.warning("preemption requested: flushing checkpoint")
+                    self.save(step + 1)
+                    break
+        if self.ckpter:
+            self.ckpter.wait()
+        return losses

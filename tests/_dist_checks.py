@@ -1,0 +1,305 @@
+"""Distributed equivalence checks, run in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (device count is locked
+at first jax import, so these cannot run inside the main pytest process).
+
+Usage:  python tests/_dist_checks.py <check-name>
+Prints ``PASS <name>`` on success; any assertion raises.
+"""
+import os
+import sys
+
+if __name__ == "__main__":
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np          # noqa: E402
+import jax                  # noqa: E402
+import jax.numpy as jnp     # noqa: E402
+
+
+def err(a, b):
+    return float(np.abs(np.asarray(a, np.float64)
+                        - np.asarray(b, np.float64)).max())
+
+
+def _runtimes(pc):
+    from repro.core.runtime import Runtime
+    from repro.core.topology import ParallelConfig, make_mesh
+    mesh = make_mesh(pc)
+    rt = Runtime(mesh=mesh, pc=pc, impl="ref")
+    pc0 = ParallelConfig()
+    mesh0 = make_mesh(pc0, devices=jax.devices()[:1])
+    rt0 = Runtime(mesh=mesh0, pc=pc0, impl="ref")
+    return rt, rt0
+
+
+def check_attention_grid():
+    from repro.core.topology import ParallelConfig, make_mesh
+    from repro.core.attention2d import Attn2DConfig, attention_2d
+    from repro.core.zigzag import to_zigzag, from_zigzag
+    from repro.kernels.ref import attention_ref
+
+    rng = np.random.default_rng(1)
+    B, S, H, HKV, D = 2, 64, 8, 4, 16
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, HKV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, HKV, D)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+
+    def oracle(q, k, v):
+        out, _ = attention_ref(q, k, v, causal=True)
+        return (out * w).sum(), out
+
+    (_, o_ref), g_ref = jax.value_and_grad(
+        oracle, argnums=(0, 1, 2), has_aux=True)(q, k, v)
+
+    grids = [(1, 1, 1, 4, "head_first"), (1, 1, 2, 2, "context_first"),
+             (1, 2, 2, 2, "head_first"), (1, 4, 1, 2, "head_first"),
+             (1, 8, 1, 1, "head_first"), (2, 2, 2, 1, "context_first"),
+             (2, 1, 1, 2, "head_first")]
+    for dp, hp, no, wi, placement in grids:
+        pc = ParallelConfig(dp=dp, hp=hp, cp_outer=no, cp_inner=wi,
+                            placement=placement)
+        mesh = make_mesh(pc)
+        cp = pc.cp
+        cfg = Attn2DConfig(hp=hp, n_out=no, w=wi, causal=True, impl="ref")
+
+        def dist(q, k, v):
+            qz, kz, vz = (to_zigzag(x, cp) for x in (q, k, v))
+            with mesh:
+                out = attention_2d(qz, kz, vz, mesh=mesh, cfg=cfg)
+            out = from_zigzag(out, cp)
+            return (out * w).sum(), out
+
+        with mesh:
+            (_, o_d), g_d = jax.value_and_grad(
+                dist, argnums=(0, 1, 2), has_aux=True)(q, k, v)
+        assert err(o_d, o_ref) < 5e-6, (hp, no, wi, err(o_d, o_ref))
+        for a, b in zip(g_d, g_ref):
+            assert err(a, b) < 5e-6, (hp, no, wi)
+    print("PASS attention_grid")
+
+
+def check_attention_modes():
+    from repro.core.topology import ParallelConfig, make_mesh
+    from repro.core.attention2d import Attn2DConfig, attention_2d
+    from repro.core.zigzag import to_zigzag, from_zigzag
+    from repro.kernels.ref import attention_ref
+
+    rng = np.random.default_rng(2)
+    B, S, H, HKV, D = 1, 96, 4, 2, 8
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, HKV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, HKV, D)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+
+    cases = [
+        dict(causal=True, zigzag=True, window=20, softcap=0.0,
+             hp=2, no=2, wi=2),
+        dict(causal=True, zigzag=True, window=None, softcap=25.0,
+             hp=2, no=1, wi=2),
+        dict(causal=False, zigzag=False, window=None, softcap=0.0,
+             hp=2, no=2, wi=2),
+        dict(causal=True, zigzag=False, window=None, softcap=0.0,
+             hp=1, no=2, wi=2),
+        dict(causal=True, zigzag=False, window=12, softcap=0.0,
+             hp=2, no=1, wi=2),
+    ]
+    for c in cases:
+        cp = c["no"] * c["wi"]
+        pc = ParallelConfig(hp=c["hp"], cp_outer=c["no"], cp_inner=c["wi"])
+        mesh = make_mesh(pc)
+        cfg = Attn2DConfig(hp=c["hp"], n_out=c["no"], w=c["wi"],
+                           causal=c["causal"], zigzag=c["zigzag"],
+                           window=c["window"], softcap=c["softcap"],
+                           impl="ref")
+        zz = c["zigzag"] and c["causal"]
+
+        def oracle(q, k, v):
+            out, _ = attention_ref(q, k, v, causal=c["causal"],
+                                   window=c["window"], softcap=c["softcap"])
+            return (out * w).sum(), out
+
+        def dist(q, k, v):
+            if zz:
+                q, k, v = (to_zigzag(x, cp) for x in (q, k, v))
+            with mesh:
+                out = attention_2d(q, k, v, mesh=mesh, cfg=cfg)
+            return ((from_zigzag(out, cp) if zz else out) * w).sum(), \
+                from_zigzag(out, cp) if zz else out
+
+        (_, o_ref), g_ref = jax.value_and_grad(
+            oracle, argnums=(0, 1, 2), has_aux=True)(q, k, v)
+        with mesh:
+            (_, o_d), g_d = jax.value_and_grad(
+                dist, argnums=(0, 1, 2), has_aux=True)(q, k, v)
+        assert err(o_d, o_ref) < 5e-6, (c, err(o_d, o_ref))
+        for a, b in zip(g_d, g_ref):
+            assert err(a, b) < 5e-6, c
+    print("PASS attention_modes")
+
+
+def check_ssm():
+    from repro.core.topology import ParallelConfig
+    from repro.models.ssm import (Mamba1Dims, Mamba2Dims, init_mamba1,
+                                  init_mamba2, mamba1_apply, mamba2_apply)
+    pc = ParallelConfig(dp=1, hp=2, cp_outer=2, cp_inner=2)
+    rt, rt0 = _runtimes(pc)
+    key = jax.random.PRNGKey(0)
+    B, S, D = 2, 64, 32
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, D), jnp.float32)
+
+    m1 = Mamba1Dims(d_model=D, d_inner=2 * D, d_state=8, seg=8)
+    p1 = init_mamba1(key, m1)
+    y_d = mamba1_apply(p1, x, rt, m1)
+    y_s = mamba1_apply(p1, x, rt0, m1)
+    assert err(y_d, y_s) < 1e-5
+    g_d = jax.grad(lambda x: (mamba1_apply(p1, x, rt, m1) ** 2).sum())(x)
+    g_s = jax.grad(lambda x: (mamba1_apply(p1, x, rt0, m1) ** 2).sum())(x)
+    assert err(g_d, g_s) < 1e-5
+
+    m2 = Mamba2Dims(d_model=D, d_inner=2 * D, d_state=8, head_dim=8, seg=8)
+    p2 = init_mamba2(key, m2)
+    y_d = mamba2_apply(p2, x, rt, m2)
+    y_s = mamba2_apply(p2, x, rt0, m2)
+    assert err(y_d, y_s) < 5e-5
+    print("PASS ssm")
+
+
+def check_moe():
+    from repro.core.topology import ParallelConfig
+    from repro.models.moe import MoEDims, init_moe, moe_apply
+    pc = ParallelConfig(dp=2, hp=2, cp_outer=1, cp_inner=2)
+    rt, rt0 = _runtimes(pc)
+    B, S, D = 2, 32, 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, D), jnp.float32)
+    m = MoEDims(d_model=D, n_experts=16, top_k=2, d_ff=32, n_shared=1,
+                capacity_factor=8.0)
+    p = init_moe(jax.random.PRNGKey(0), m)
+    y1, _ = moe_apply(p, x, rt, m)
+    y0, _ = moe_apply(p, x, rt0, m)
+    assert err(y1, y0) < 5e-6
+    g1 = jax.grad(lambda p: (moe_apply(p, x, rt, m)[0] ** 2).sum())(p)
+    g0 = jax.grad(lambda p: (moe_apply(p, x, rt0, m)[0] ** 2).sum())(p)
+    for kk in ("router", "w1", "w2", "w3"):
+        assert err(g1[kk], g0[kk]) < 1e-4, kk
+    print("PASS moe")
+
+
+def check_e2e_loss():
+    """Full forward_loss on an 8-device 2D mesh == single device, for one
+    arch per family (incl. zigzag data layout handling)."""
+    from repro.configs import get_reduced
+    from repro.core.topology import ParallelConfig
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.models.model import forward_loss, init_params
+
+    for name, grid in [("qwen3-1.7b", (1, 2, 2, 2)),
+                       ("gemma2-2b", (2, 2, 1, 2)),
+                       ("zamba2-7b", (1, 4, 1, 2)),
+                       ("falcon-mamba-7b", (1, 1, 4, 2)),
+                       ("deepseek-v2-lite-16b", (1, 4, 2, 1)),
+                       ("whisper-small", (1, 4, 1, 2))]:
+        dp, hp, no, wi = grid
+        cfg = get_reduced(name)
+        pc = ParallelConfig(dp=dp, hp=hp, cp_outer=no, cp_inner=wi)
+        rt, rt0 = _runtimes(pc)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        zz = cfg.zigzag and cfg.family in ("dense", "moe", "encdec")
+        data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=64,
+                                      global_batch=2, cp=pc.cp, zigzag=zz),
+                           cfg)
+        batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+        data0 = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=64,
+                                       global_batch=2, cp=1, zigzag=False),
+                            cfg)
+        batch0 = {k: jnp.asarray(v) for k, v in data0.batch(0).items()}
+        with rt.mesh:
+            loss_d, _ = forward_loss(params, batch, rt, cfg)
+        with rt0.mesh:
+            loss_s, _ = forward_loss(params, batch0, rt0, cfg)
+        assert abs(float(loss_d) - float(loss_s)) < 1e-3, \
+            (name, float(loss_d), float(loss_s))
+    print("PASS e2e_loss")
+
+
+def check_decode_consistency():
+    """Distributed prefill + decode == the same logits as single-device."""
+    from repro.configs import get_reduced
+    from repro.core.topology import ParallelConfig
+    from repro.models.decode import decode_step, grow_caches, prefill
+    from repro.models.model import init_params
+
+    for name, grid in [("qwen3-1.7b", (1, 2, 2, 1)),
+                       ("gemma2-2b", (1, 2, 1, 2)),
+                       ("deepseek-v2-lite-16b", (1, 4, 1, 1)),
+                       ("falcon-mamba-7b", (1, 1, 2, 2))]:
+        dp, hp, no, wi = grid
+        cfg = get_reduced(name)
+        pc = ParallelConfig(dp=dp, hp=hp, cp_outer=no, cp_inner=wi)
+        rt, rt0 = _runtimes(pc)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        B, S = 2, 32
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                    cfg.vocab)
+        batch = {"tokens": tokens}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.random.normal(
+                jax.random.PRNGKey(2), (B, cfg.enc_frames, cfg.d_model))
+        with rt.mesh:
+            lg_d, caches_d = prefill(params, batch, rt, cfg)
+            caches_d = grow_caches(cfg, caches_d, 4)
+            nxt = np.asarray(
+                jnp.argmax(lg_d[:, -1], axis=-1))[:, None].astype(np.int32)
+            lg2_d, _ = decode_step(params, caches_d, jnp.asarray(nxt),
+                                   jnp.int32(S), rt, cfg)
+        with rt0.mesh:
+            lg_s, caches_s = prefill(params, batch, rt0, cfg)
+            caches_s = grow_caches(cfg, caches_s, 4)
+            lg2_s, _ = decode_step(params, caches_s, jnp.asarray(nxt),
+                                   jnp.int32(S), rt0, cfg)
+        assert err(lg_d, lg_s) < 1e-3, (name, err(lg_d, lg_s))
+        assert err(lg2_d, lg2_s) < 1e-3, (name, err(lg2_d, lg2_s))
+    print("PASS decode_consistency")
+
+
+def check_grad_compression():
+    """int8 error-feedback psum inside shard_map over the data axis."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core.attention2d import _shard_map
+    from repro.core.topology import ParallelConfig, make_mesh, AXIS_DATA
+    from repro.train.optimizer import compressed_psum
+
+    pc = ParallelConfig(dp=8)
+    mesh = make_mesh(pc)
+    g = jax.random.normal(jax.random.PRNGKey(0), (8, 64), jnp.float32)
+    err_state = jnp.zeros((8, 64), jnp.float32)
+
+    def local(g, e):
+        s, e2 = compressed_psum(g, e, AXIS_DATA)
+        return s, e2
+
+    f = _shard_map(local, mesh, (P(AXIS_DATA, None), P(AXIS_DATA, None)),
+                   (P(None, None), P(AXIS_DATA, None)))
+    # accumulate over steps: error feedback should keep the running sum
+    # close to the exact running sum
+    exact_acc = np.zeros((1, 64))
+    comp_acc = np.zeros((1, 64))
+    e = err_state
+    for step in range(20):
+        g_step = jax.random.normal(jax.random.PRNGKey(step), (8, 64))
+        with mesh:
+            s, e = f(g_step, e)
+        exact_acc += np.asarray(g_step).sum(0, keepdims=True)
+        comp_acc += np.asarray(s)[:1]
+    drift = np.abs(comp_acc - exact_acc).max() / np.abs(exact_acc).max()
+    assert drift < 0.05, drift
+    print("PASS grad_compression")
+
+
+CHECKS = {name[len("check_"):]: fn for name, fn in list(globals().items())
+          if name.startswith("check_")}
+
+if __name__ == "__main__":
+    CHECKS[sys.argv[1]]()

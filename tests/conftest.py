@@ -1,0 +1,18 @@
+"""Test fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+see 1 device; distributed tests spawn subprocesses with their own flags."""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def single_runtime():
+    import jax
+    from repro.core.runtime import Runtime
+    from repro.core.topology import ParallelConfig, make_mesh
+    pc = ParallelConfig()
+    mesh = make_mesh(pc, devices=jax.devices()[:1])
+    return Runtime(mesh=mesh, pc=pc, impl="ref")

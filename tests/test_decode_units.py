@@ -1,0 +1,106 @@
+"""Decode-path units on one device: flash-decoding combine vs oracle,
+ring-buffer cache semantics, cache growth invariants, serving shardings."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_reduced
+from repro.kernels.ref import attention_ref
+from repro.models.attention_block import decode_attention
+from repro.models.decode import grow_caches, init_caches
+from repro.models.model import init_params
+
+
+def test_decode_attention_matches_oracle(single_runtime):
+    """Flash-decoding (banded mask, lse-combine) == dense oracle for a
+    1-token query against a partially filled cache."""
+    rt = single_runtime
+    rng = np.random.default_rng(0)
+    B, S, H, D = 2, 32, 4, 16
+    q = jnp.asarray(rng.standard_normal((B, 1, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    pos = 20          # only positions 0..20 are valid
+    with rt.mesh:
+        out = decode_attention(q, k, v, jnp.int32(pos), rt)
+    o_ref, _ = attention_ref(q, k[:, :pos + 1], v[:, :pos + 1])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(o_ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_decode_attention_replicated_kv(single_runtime):
+    """MLA-style single logical KV head (kv_replicated=True)."""
+    rt = single_runtime
+    rng = np.random.default_rng(1)
+    B, S, H, D = 1, 16, 4, 8
+    q = jnp.asarray(rng.standard_normal((B, 1, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, 1, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, 1, D)), jnp.float32)
+    with rt.mesh:
+        out = decode_attention(q, k, v, jnp.int32(S - 1), rt,
+                               kv_replicated=True)
+    o_ref, _ = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(o_ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_decode_attention_ring_full(single_runtime):
+    """Ring-buffer mode: all live slots attendable, order-invariant."""
+    rt = single_runtime
+    rng = np.random.default_rng(2)
+    B, W, H, D = 1, 8, 2, 8
+    q = jnp.asarray(rng.standard_normal((B, 1, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, W, H, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, W, H, D)), jnp.float32)
+    with rt.mesh:
+        out_full = decode_attention(q, k, v, jnp.int32(W - 1), rt,
+                                    ring_full=jnp.int32(W))
+        # permuting buffer slots must not change the output
+        perm = jnp.asarray(np.random.default_rng(3).permutation(W))
+        out_perm = decode_attention(q, k[:, perm], v[:, perm],
+                                    jnp.int32(W - 1), rt,
+                                    ring_full=jnp.int32(W))
+    np.testing.assert_allclose(np.asarray(out_full), np.asarray(out_perm),
+                               atol=1e-5, rtol=1e-5)
+    o_ref, _ = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out_full), np.asarray(o_ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "gemma2-2b",
+                                  "deepseek-v2-lite-16b", "zamba2-7b",
+                                  "falcon-mamba-7b", "whisper-small"])
+def test_cache_shapes_and_growth(arch):
+    cfg = get_reduced(arch)
+    caches = init_caches(cfg, b=2, s_max=16)
+    grown = grow_caches(cfg, caches, 8)
+    assert jax.tree.structure(caches) == jax.tree.structure(grown)
+    for a, b in zip(jax.tree.leaves(caches), jax.tree.leaves(grown)):
+        assert b.size >= a.size
+        assert a.dtype == b.dtype
+    # growing by 0 keeps attention caches identical in shape
+    same = grow_caches(cfg, caches, 0)
+    for a, b in zip(jax.tree.leaves(caches), jax.tree.leaves(same)):
+        assert a.shape == b.shape
+
+
+def test_window_cache_capped_at_window():
+    cfg = get_reduced("gemma2-2b")          # window=16, pattern 2
+    caches = init_caches(cfg, b=1, s_max=64)
+    # local slot (0) capped at window; global slot (1) full length
+    assert caches["blocks"][0]["k"].shape[2] == 16
+    assert caches["blocks"][1]["k"].shape[2] == 64
+    grown = grow_caches(cfg, caches, 100)
+    assert grown["blocks"][0]["k"].shape[2] == 16      # never beyond window
+    assert grown["blocks"][1]["k"].shape[2] == 164
+
+
+def test_tp_shardings_never_exceed_model_axes(single_runtime):
+    from repro.core.zero import tp_shardings
+    cfg = get_reduced("qwen3-1.7b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    sh = tp_shardings(params, single_runtime.mesh)
+    for s in jax.tree.leaves(sh):
+        for axis in jax.tree_util.tree_leaves(tuple(s.spec)):
+            assert axis in ("head", "outer", "inner")

@@ -1,0 +1,23 @@
+"""Distributed equivalence tests — each runs a subprocess with 8 fake host
+devices (device count is locked at first jax import in a process)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_CHECKS = ["attention_grid", "attention_modes", "ssm", "moe", "e2e_loss",
+           "decode_consistency", "grad_compression"]
+
+
+@pytest.mark.parametrize("check", _CHECKS)
+def test_distributed(check):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = os.path.join(os.path.dirname(__file__), "_dist_checks.py")
+    res = subprocess.run([sys.executable, script, check],
+                         capture_output=True, text=True, timeout=1200,
+                         env=env)
+    assert res.returncode == 0, f"{check} failed:\n{res.stdout}\n{res.stderr}"
+    assert f"PASS {check}" in res.stdout

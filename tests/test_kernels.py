@@ -1,0 +1,149 @@
+"""Pallas flash-attention kernel vs pure-jnp oracle: shape/dtype sweeps,
+gradient checks, and hypothesis property tests on the combine rule."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def t(shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+SWEEP = [
+    # b, lq, lk, hq, hkv, d, causal, window, softcap
+    (2, 64, 64, 4, 4, 32, True, None, 0.0),
+    (1, 48, 80, 4, 2, 24, True, None, 0.0),      # GQA + rectangular + pad
+    (1, 33, 100, 6, 3, 40, True, None, 0.0),     # odd lengths
+    (2, 16, 96, 4, 4, 32, True, None, 0.0),      # ring-like short q
+    (1, 32, 32, 2, 2, 16, False, None, 30.0),    # softcap, non-causal
+    (2, 64, 64, 4, 1, 32, True, 16, 0.0),        # MQA + sliding window
+    (1, 64, 64, 8, 2, 64, True, 8, 25.0),        # window + softcap + GQA
+    (1, 128, 128, 2, 2, 128, True, None, 0.0),   # MXU-aligned
+]
+
+
+@pytest.mark.parametrize("case", SWEEP, ids=[str(i) for i in range(len(SWEEP))])
+def test_fwd_matches_oracle(case):
+    b, lq, lk, hq, hkv, d, causal, window, cap = case
+    q, k, v = t((b, lq, hq, d)), t((b, lk, hkv, d)), t((b, lk, hkv, d))
+    o_ref, lse_ref = ref.attention_ref(q, k, v, causal=causal,
+                                       window=window, softcap=cap)
+    o_p, lse_p = ops.flash_fwd_chunk(q, k, v, causal=causal, window=window,
+                                     softcap=cap, impl="pallas_interpret",
+                                     block_q=32, block_k=32)
+    np.testing.assert_allclose(o_p, o_ref, atol=2e-5, rtol=2e-5)
+    mask = lse_ref > ref.NEG_INF / 2
+    np.testing.assert_allclose(np.where(mask, lse_p, 0.0),
+                               np.where(mask, lse_ref, 0.0),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("case", SWEEP[:6],
+                         ids=[str(i) for i in range(6)])
+def test_bwd_matches_oracle(case):
+    b, lq, lk, hq, hkv, d, causal, window, cap = case
+    q, k, v = t((b, lq, hq, d)), t((b, lk, hkv, d)), t((b, lk, hkv, d))
+
+    def loss_ref(q, k, v):
+        return (ref.attention_ref(q, k, v, causal=causal, window=window,
+                                  softcap=cap)[0] ** 2).sum()
+
+    def loss_pal(q, k, v):
+        return (ops.flash_attention(q, k, v, causal=causal, window=window,
+                                    softcap=cap, impl="pallas_interpret",
+                                    block_q=32, block_k=32) ** 2).sum()
+
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    g_pal = jax.grad(loss_pal, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g_pal, g_ref):
+        np.testing.assert_allclose(a, b_, atol=5e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtypes(dtype):
+    q, k, v = (t((1, 64, 4, 32), dtype) for _ in range(3))
+    o_ref, _ = ref.attention_ref(q, k, v, causal=True)
+    o_p, _ = ops.flash_fwd_chunk(q, k, v, causal=True,
+                                 impl="pallas_interpret",
+                                 block_q=32, block_k=32)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o_p, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_chunk_bwd_matches_ref():
+    q, k, v = t((1, 32, 4, 16)), t((1, 48, 2, 16)), t((1, 48, 2, 16))
+    out, lse = ref.attention_ref(q, k, v, causal=True)
+    do = t(out.shape)
+    a = ops.flash_bwd_chunk(q, k, v, out, lse, do, causal=True,
+                            impl="pallas_interpret", block_q=16, block_k=16)
+    b = ref.attention_bwd_ref(q, k, v, out, lse, do, causal=True)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(x, y, atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Property tests
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(lk1=st.integers(1, 24), lk2=st.integers(1, 24),
+       seed=st.integers(0, 2 ** 16))
+def test_combine_equals_joint(lk1, lk2, seed):
+    """Attention over concat(K1, K2) == lse-combine of the two partials —
+    the invariant ring attention and flash-decoding rely on."""
+    rng = np.random.default_rng(seed)
+    b, lq, h, d = 1, 8, 2, 8
+    q = jnp.asarray(rng.standard_normal((b, lq, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, lk1 + lk2, h, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, lk1 + lk2, h, d)), jnp.float32)
+    o_joint, lse_joint = ref.attention_ref(q, k, v)
+    p1 = ref.attention_ref(q, k[:, :lk1], v[:, :lk1])
+    p2 = ref.attention_ref(q, k[:, lk1:], v[:, lk1:])
+    o_c, lse_c = ref.combine_attention([p1, p2])
+    np.testing.assert_allclose(o_c, o_joint, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(lse_c, lse_joint, atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 5), seed=st.integers(0, 2 ** 16))
+def test_combine_order_invariance(n, seed):
+    """The combine is associative/commutative over KV chunks."""
+    rng = np.random.default_rng(seed)
+    b, lq, h, d, lk = 1, 4, 1, 8, 6
+    q = jnp.asarray(rng.standard_normal((b, lq, h, d)), jnp.float32)
+    parts = []
+    for _ in range(n):
+        k = jnp.asarray(rng.standard_normal((b, lk, h, d)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, lk, h, d)), jnp.float32)
+        parts.append(ref.attention_ref(q, k, v))
+    fwd = ref.combine_attention(parts)
+    rev = ref.combine_attention(parts[::-1])
+    np.testing.assert_allclose(fwd[0], rev[0], atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(fwd[1], rev[1], atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), window=st.integers(1, 20))
+def test_window_is_band_subset(seed, window):
+    """Sliding-window output == dense attention with a banded mask."""
+    rng = np.random.default_rng(seed)
+    b, l, h, d = 1, 16, 2, 8
+    q = jnp.asarray(rng.standard_normal((b, l, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, l, h, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, l, h, d)), jnp.float32)
+    o_win, _ = ref.attention_ref(q, k, v, causal=True, window=window)
+    # manual band mask via bias
+    qi = np.arange(l)[:, None]
+    kj = np.arange(l)[None, :]
+    bias = np.where((kj <= qi) & (kj >= qi - window + 1), 0.0, -1e30)
+    o_bias, _ = ref.attention_ref(q, k, v,
+                                  bias=jnp.asarray(bias)[None, None])
+    np.testing.assert_allclose(o_win, o_bias, atol=1e-5, rtol=1e-5)
