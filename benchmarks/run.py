@@ -13,6 +13,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
 """
 from __future__ import annotations
 
+import json
+import sys
 import time
 
 import numpy as np
@@ -121,6 +123,60 @@ def micro_kernel_interpret():
     _row("micro.pallas_interpret.s128", us, f"allclose_err={err:.2e}")
 
 
+def micro_ring_step(out_path: str = "BENCH_ring.json"):
+    """Micro wall-clock of one zigzag Double-Ring step (fwd + bwd) with a
+    *traced* BandMask — flashref vs interpret-mode Pallas — written to
+    ``BENCH_ring.json`` so the BENCH_* trajectory catches regressions on
+    the ring hot path.  (Interpret mode emulates the kernel on CPU; its
+    absolute time is interpreter overhead, not TPU time — the tracked
+    signal is the trend of each impl against itself.)
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.kernels.ref import BandMask
+
+    rng = np.random.default_rng(0)
+    b, s_loc, hq, hkv, d = 1, 256, 8, 2, 64
+    c, cp = s_loc // 2, 4
+    i_rank, j_visit = 2, 1           # a generic off-diagonal ring step
+    q = jnp.asarray(rng.standard_normal((b, s_loc, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s_loc, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s_loc, hkv, d)), jnp.float32)
+
+    bench = {"config": {"b": b, "s_loc": s_loc, "hq": hq, "hkv": hkv,
+                        "d": d, "cp": cp, "step": [i_rank, j_visit],
+                        "block": 64},
+             "cases": []}
+    for impl in ("flashref", "pallas_interpret"):
+        fwd = jax.jit(lambda i, j: ops.flash_fwd_chunk(
+            q, k, v, causal=True, band=BandMask.zigzag(i, j, c, cp),
+            impl=impl, block_q=64, block_k=64))
+        out, lse = fwd(jnp.int32(i_rank), jnp.int32(j_visit))
+        jax.block_until_ready((out, lse))
+        do = jnp.asarray(rng.standard_normal(out.shape), jnp.float32)
+        bwd = jax.jit(lambda i, j: ops.flash_bwd_chunk(
+            q, k, v, out, lse, do, causal=True,
+            band=BandMask.zigzag(i, j, c, cp),
+            impl=impl, block_q=64, block_k=64))
+        jax.block_until_ready(bwd(jnp.int32(i_rank), jnp.int32(j_visit)))
+        n = 5
+        t0 = time.perf_counter()
+        for _ in range(n):
+            jax.block_until_ready(fwd(jnp.int32(i_rank), jnp.int32(j_visit)))
+        fwd_us = (time.perf_counter() - t0) / n * 1e6
+        t0 = time.perf_counter()
+        for _ in range(n):
+            jax.block_until_ready(bwd(jnp.int32(i_rank), jnp.int32(j_visit)))
+        bwd_us = (time.perf_counter() - t0) / n * 1e6
+        bench["cases"].append({"impl": impl, "fwd_us": round(fwd_us, 1),
+                               "bwd_us": round(bwd_us, 1)})
+        _row(f"micro.ring_step.{impl}.fwd", fwd_us, f"s_loc={s_loc}")
+        _row(f"micro.ring_step.{impl}.bwd", bwd_us, f"s_loc={s_loc}")
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=2)
+
+
 def micro_train_step():
     import jax
     import jax.numpy as jnp
@@ -153,6 +209,10 @@ def micro_train_step():
 
 
 def main() -> None:
+    if len(sys.argv) > 1 and sys.argv[1] == "ring":
+        print("name,us_per_call,derived")
+        micro_ring_step()
+        return
     print("name,us_per_call,derived")
     t2_endtoend()
     t3_grid()
@@ -160,6 +220,7 @@ def main() -> None:
     t5_double_ring()
     micro_ref_attention()
     micro_kernel_interpret()
+    micro_ring_step()
     micro_train_step()
 
 

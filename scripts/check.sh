@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Tier-1 gate + ring micro-benchmark.  Run from anywhere:
+#     scripts/check.sh
+# Tests must pass; the bench rewrites BENCH_ring.json so perf regressions
+# on the ring hot path show up in the BENCH_* trajectory.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+python benchmarks/run.py ring

@@ -24,7 +24,12 @@ The paper's core mechanism (LoongTrain §4), TPU-native:
       j = i : causal diagonal       (two causal halves + one full)
       j > i : Q_hi × whole-K        (both full)
 
-  so per-step FLOPs are balanced and ≈ useful FLOPs.
+  so per-step FLOPs are balanced and ≈ useful FLOPs.  All three cases are
+  *one* kernel call parameterized by the scalar pair ``(i, j)`` through a
+  ``BandMask``: the kernel's logical-position masking plus block-skip
+  reproduces the case split internally, so there is no ``lax.cond`` branch
+  pair, no duplicated branch HLO, and no zero-padding/concatenate traffic
+  around the half-chunk cases.
 * The ring is one ``jax.custom_vjp`` unit: forward accumulates (out, lse)
   with the flash combine rule; backward re-runs the ring, accumulating dq
   locally while dk/dv ride around the rings *with* their KV chunk and arrive
@@ -43,10 +48,11 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.core.runtime import shard_map_compat as _shard_map
 from repro.core.topology import (AXIS_HP, AXIS_INNER, AXIS_OUTER, BATCH_AXES,
                                  SEQ_AXES)
 from repro.kernels.ops import flash_attention, flash_bwd_chunk, flash_fwd_chunk
-from repro.kernels.ref import NEG_INF, combine_pair
+from repro.kernels.ref import BandMask, combine_pair
 
 
 class Attn2DConfig(NamedTuple):
@@ -115,95 +121,31 @@ def _kw(cfg: RingConfig):
 # Ring forward
 # ---------------------------------------------------------------------------
 
+def _step_band(cfg: RingConfig, i, j, s_loc: int) -> BandMask:
+    """The (i, j) ring-step mask as a BandMask over the full local shapes.
+
+    ``i``/``j`` are traced rank indices; the offsets land in the kernels as
+    scalar-prefetch operands, so the case split (j<i full, j=i diagonal,
+    j>i empty/half) happens inside one kernel call via logical-position
+    masking + block skip — no ``lax.cond`` branch pair.
+    """
+    if cfg.zigzag:
+        return BandMask.zigzag(i, j, s_loc // 2, cfg.cp)
+    # Contiguous chunks (no causal load balance): chunk r = cp rank r.
+    # Used by hybrid/SSM models whose recurrent layers need contiguous
+    # sequence shards; the paper's balanced layout needs the zigzag data
+    # permutation which those layers cannot tolerate.
+    return BandMask.uniform((i - j) * s_loc)
+
+
 def _step_fwd(q, kc, vc, o: int, t: int, i_out, i_in, i, cfg: RingConfig):
     """Partial (out, lse) of local q against the visiting KV chunk pair."""
     kw = _kw(cfg)
     if not cfg.causal:
         return flash_fwd_chunk(q, kc, vc, causal=False, **kw)
-
-    if not cfg.zigzag:
-        # Contiguous chunks (no causal load balance): chunk r = cp rank r.
-        # Used by hybrid/SSM models whose recurrent layers need contiguous
-        # sequence shards; the paper's balanced layout needs the zigzag
-        # data permutation which those layers cannot tolerate.
-        if o == 0 and t == 0:
-            return flash_fwd_chunk(q, kc, vc, causal=True,
-                                   window=cfg.window, **kw)
-        j = _visiting(cfg, i_out, i_in, o, t)
-        s_loc = q.shape[1]
-
-        def past(q, kc, vc):
-            if cfg.window is None:
-                return flash_fwd_chunk(q, kc, vc, causal=False, **kw)
-            return flash_fwd_chunk(q, kc, vc, causal=True, window=cfg.window,
-                                   mask_offset=(i - j) * s_loc, **kw)
-
-        def future(q, kc, vc):
-            b, _, hq, dh = q.shape
-            return (jnp.zeros_like(q),
-                    jnp.full((b, hq, s_loc), NEG_INF, jnp.float32))
-
-        return lax.cond(j < i, past, future, q, kc, vc)
-
-    c = q.shape[1] // 2
-    cp = cfg.cp
-    if o == 0 and t == 0:
-        # Diagonal: q_lo=chunk i, q_hi=chunk 2cp-1-i; kv = same chunks.
-        o_lo, l_lo = flash_fwd_chunk(
-            q[:, :c], kc[:, :c], vc[:, :c], causal=True, window=cfg.window,
-            **kw)
-        if cfg.window is None:
-            # bottom-right-aligned causal == full on k_lo + diag on k_hi
-            o_hi, l_hi = flash_fwd_chunk(q[:, c:], kc, vc, causal=True, **kw)
-        else:
-            p1 = flash_fwd_chunk(q[:, c:], kc[:, :c], vc[:, :c], causal=True,
-                                 window=cfg.window,
-                                 mask_offset=(2 * cp - 1 - 2 * i) * c, **kw)
-            p2 = flash_fwd_chunk(q[:, c:], kc[:, c:], vc[:, c:], causal=True,
-                                 window=cfg.window, **kw)
-            o_hi, l_hi = combine_pair(p1[0], p1[1], p2[0], p2[1])
-        return (jnp.concatenate([o_lo, o_hi], axis=1),
-                jnp.concatenate([l_lo, l_hi], axis=2))
-
     j = _visiting(cfg, i_out, i_in, o, t)
-
-    if cfg.window is None:
-        def case_a(q, kc, vc):
-            # j < i: whole local q attends the visitor's low chunk, fully.
-            return flash_fwd_chunk(q, kc[:, :c], vc[:, :c], causal=False,
-                                   **kw)
-
-        def case_b(q, kc, vc):
-            # j > i: only q_hi attends, but against the visitor's whole kv.
-            o_hi, l_hi = flash_fwd_chunk(q[:, c:], kc, vc, causal=False,
-                                         **kw)
-            return (jnp.concatenate([jnp.zeros_like(o_hi), o_hi], axis=1),
-                    jnp.concatenate([jnp.full_like(l_hi, NEG_INF), l_hi],
-                                    axis=2))
-    else:
-        def case_a(q, kc, vc):
-            lo = flash_fwd_chunk(q[:, :c], kc[:, :c], vc[:, :c], causal=True,
-                                 window=cfg.window, mask_offset=(i - j) * c,
-                                 **kw)
-            hi = flash_fwd_chunk(q[:, c:], kc[:, :c], vc[:, :c], causal=True,
-                                 window=cfg.window,
-                                 mask_offset=(2 * cp - 1 - i - j) * c, **kw)
-            return (jnp.concatenate([lo[0], hi[0]], axis=1),
-                    jnp.concatenate([lo[1], hi[1]], axis=2))
-
-        def case_b(q, kc, vc):
-            h1 = flash_fwd_chunk(q[:, c:], kc[:, :c], vc[:, :c], causal=True,
-                                 window=cfg.window,
-                                 mask_offset=(2 * cp - 1 - i - j) * c, **kw)
-            h2 = flash_fwd_chunk(q[:, c:], kc[:, c:], vc[:, c:], causal=True,
-                                 window=cfg.window, mask_offset=(j - i) * c,
-                                 **kw)
-            o_hi, l_hi = combine_pair(h1[0], h1[1], h2[0], h2[1])
-            return (jnp.concatenate([jnp.zeros_like(o_hi), o_hi], axis=1),
-                    jnp.concatenate([jnp.full_like(l_hi, NEG_INF), l_hi],
-                                    axis=2))
-
-    return lax.cond(j < i, case_a, case_b, q, kc, vc)
+    return flash_fwd_chunk(q, kc, vc, causal=True, window=cfg.window,
+                           band=_step_band(cfg, i, j, q.shape[1]), **kw)
 
 
 def _ring_fwd(q, k, v, cfg: RingConfig):
@@ -250,102 +192,10 @@ def _step_bwd(q, kc, vc, out, lse, do, o: int, t: int, i_out, i_in, i,
     kw = _kw(cfg)
     if not cfg.causal:
         return flash_bwd_chunk(q, kc, vc, out, lse, do, causal=False, **kw)
-
-    if not cfg.zigzag:
-        if o == 0 and t == 0:
-            return flash_bwd_chunk(q, kc, vc, out, lse, do, causal=True,
-                                   window=cfg.window, **kw)
-        j = _visiting(cfg, i_out, i_in, o, t)
-        s_loc = q.shape[1]
-
-        def past(q, kc, vc, out, lse, do):
-            if cfg.window is None:
-                return flash_bwd_chunk(q, kc, vc, out, lse, do,
-                                       causal=False, **kw)
-            return flash_bwd_chunk(q, kc, vc, out, lse, do, causal=True,
-                                   window=cfg.window,
-                                   mask_offset=(i - j) * s_loc, **kw)
-
-        def future(q, kc, vc, out, lse, do):
-            return (jnp.zeros_like(q), jnp.zeros_like(kc),
-                    jnp.zeros_like(vc))
-
-        return lax.cond(j < i, past, future, q, kc, vc, out, lse, do)
-
-    c = q.shape[1] // 2
-    cp = cfg.cp
-    q_lo, q_hi = q[:, :c], q[:, c:]
-    o_lo, o_hi = out[:, :c], out[:, c:]
-    g_lo, g_hi = do[:, :c], do[:, c:]
-    l_lo, l_hi = lse[:, :, :c], lse[:, :, c:]
-    zeros_kv = jnp.zeros_like(kc[:, :c])
-
-    if o == 0 and t == 0:
-        dq1, dk1, dv1 = flash_bwd_chunk(q_lo, kc[:, :c], vc[:, :c], o_lo,
-                                        l_lo, g_lo, causal=True,
-                                        window=cfg.window, **kw)
-        if cfg.window is None:
-            dq2, dkf, dvf = flash_bwd_chunk(q_hi, kc, vc, o_hi, l_hi, g_hi,
-                                            causal=True, **kw)
-        else:
-            a1 = flash_bwd_chunk(q_hi, kc[:, :c], vc[:, :c], o_hi, l_hi,
-                                 g_hi, causal=True, window=cfg.window,
-                                 mask_offset=(2 * cp - 1 - 2 * i) * c, **kw)
-            a2 = flash_bwd_chunk(q_hi, kc[:, c:], vc[:, c:], o_hi, l_hi,
-                                 g_hi, causal=True, window=cfg.window, **kw)
-            dq2 = a1[0] + a2[0]
-            dkf = jnp.concatenate([a1[1], a2[1]], axis=1)
-            dvf = jnp.concatenate([a1[2], a2[2]], axis=1)
-        dq = jnp.concatenate([dq1, dq2], axis=1)
-        dk = dkf + jnp.concatenate([dk1, jnp.zeros_like(dk1)], axis=1)
-        dv = dvf + jnp.concatenate([dv1, jnp.zeros_like(dv1)], axis=1)
-        return dq, dk, dv
-
     j = _visiting(cfg, i_out, i_in, o, t)
-
-    if cfg.window is None:
-        def case_a(q, kc, vc, out, lse, do):
-            dqa, dk_lo, dv_lo = flash_bwd_chunk(
-                q, kc[:, :c], vc[:, :c], out, lse, do, causal=False, **kw)
-            return (dqa,
-                    jnp.concatenate([dk_lo, zeros_kv], axis=1),
-                    jnp.concatenate([dv_lo, zeros_kv], axis=1))
-
-        def case_b(q, kc, vc, out, lse, do):
-            dqb, dka, dva = flash_bwd_chunk(
-                q[:, c:], kc, vc, out[:, c:], lse[:, :, c:], do[:, c:],
-                causal=False, **kw)
-            return (jnp.concatenate([jnp.zeros_like(dqb), dqb], axis=1),
-                    dka, dva)
-    else:
-        def case_a(q, kc, vc, out, lse, do):
-            d1 = flash_bwd_chunk(q[:, :c], kc[:, :c], vc[:, :c], out[:, :c],
-                                 lse[:, :, :c], do[:, :c], causal=True,
-                                 window=cfg.window, mask_offset=(i - j) * c,
-                                 **kw)
-            d2 = flash_bwd_chunk(q[:, c:], kc[:, :c], vc[:, :c], out[:, c:],
-                                 lse[:, :, c:], do[:, c:], causal=True,
-                                 window=cfg.window,
-                                 mask_offset=(2 * cp - 1 - i - j) * c, **kw)
-            return (jnp.concatenate([d1[0], d2[0]], axis=1),
-                    jnp.concatenate([d1[1] + d2[1], zeros_kv], axis=1),
-                    jnp.concatenate([d1[2] + d2[2], zeros_kv], axis=1))
-
-        def case_b(q, kc, vc, out, lse, do):
-            d1 = flash_bwd_chunk(q[:, c:], kc[:, :c], vc[:, :c], out[:, c:],
-                                 lse[:, :, c:], do[:, c:], causal=True,
-                                 window=cfg.window,
-                                 mask_offset=(2 * cp - 1 - i - j) * c, **kw)
-            d2 = flash_bwd_chunk(q[:, c:], kc[:, c:], vc[:, c:], out[:, c:],
-                                 lse[:, :, c:], do[:, c:], causal=True,
-                                 window=cfg.window, mask_offset=(j - i) * c,
-                                 **kw)
-            return (jnp.concatenate([jnp.zeros_like(d1[0]), d1[0] + d2[0]],
-                                    axis=1),
-                    jnp.concatenate([d1[1], d2[1]], axis=1),
-                    jnp.concatenate([d1[2], d2[2]], axis=1))
-
-    return lax.cond(j < i, case_a, case_b, q, kc, vc, out, lse, do)
+    return flash_bwd_chunk(q, kc, vc, out, lse, do, causal=True,
+                           window=cfg.window,
+                           band=_step_band(cfg, i, j, q.shape[1]), **kw)
 
 
 def _ring_bwd(q, k, v, out, lse, do, cfg: RingConfig):
@@ -446,16 +296,6 @@ def attention_2d_local(q, k, v, cfg: Attn2DConfig):
     if cfg.hp > 1:
         out = lax.all_to_all(out, cfg.axis_hp, 1, 2, tiled=True)
     return out
-
-
-def _shard_map(f, mesh, in_specs, out_specs):
-    try:
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-    except TypeError:  # older spelling
-        from jax.experimental.shard_map import shard_map as _sm
-        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                   check_rep=False)
 
 
 def attention_2d(q, k, v, *, mesh, cfg: Attn2DConfig):

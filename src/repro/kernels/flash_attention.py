@@ -4,15 +4,22 @@ TPU-native adaptation of FlashAttention-2 for the LoongTrain reproduction:
 
 * ``pl.pallas_call`` with explicit ``BlockSpec`` VMEM tiling; MXU-aligned
   (multiples-of-128) Q/K blocks; fp32 accumulators in VMEM scratch.
-* Bottom-right-aligned causal masking (what ring attention's diagonal step
-  needs), sliding-window (local) masking, Gemma-style logit softcap, GQA via
-  index-map head folding.
-* Fully-masked K blocks are *skipped* via ``pl.when`` on the grid ids, so the
-  compiled FLOPs of a causal call are ~half of the dense product — mirroring
-  the paper's halved-FLOPs MFU accounting.
-* The backward pass is two Pallas kernels (dq; dk/dv) following the
-  FlashAttention-2 recomputation scheme; GQA gradients are computed per
-  Q-head and group-summed in the wrapper.
+* Masking is driven by a *scalar-prefetch* band operand
+  (``pltpu.PrefetchScalarGridSpec``): an int32 ``(5,)`` vector
+  ``[q_off_lo, q_off_hi, k_off_lo, k_off_hi, kv_valid]`` carrying the
+  piecewise logical-position offsets of ``ref.BandMask``.  The offsets may
+  be traced (``lax.axis_index`` functions on the ring path), yet the
+  bottom-right-aligned causal + sliding-window *block-skip* logic still
+  runs inside the kernel: fully-masked K blocks are skipped via ``pl.when``
+  on predicates computed from the prefetched scalars, so the compiled
+  FLOPs of a causal call stay ~half of the dense product on every Double
+  Ring step — not just the static diagonal.
+* Sliding-window (local) masking, Gemma-style logit softcap, GQA via
+  index-map head folding in *both* directions: the forward and dq kernels
+  read KV block ``b // group``; the dk/dv kernel folds the query-head
+  group into its (sequential) innermost grid dimension and accumulates the
+  group-summed gradients in VMEM scratch, so replicated KV is never
+  materialized anywhere.
 
 Validated on CPU with ``interpret=True`` against ``ref.py`` (see
 ``tests/test_kernels.py``).  On real TPUs set ``interpret=False``.
@@ -27,7 +34,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.ref import _logical_pos
+
 NEG_INF = -1e30
+
+# jax >= 0.5 renamed TPUCompilerParams -> CompilerParams.
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
 
 
 class FlashParams(NamedTuple):
@@ -37,18 +50,73 @@ class FlashParams(NamedTuple):
     softcap: float
     scale: float
     lq_valid: int          # number of real (unpadded) queries
-    lk_valid: int          # number of real (unpadded) keys
+    lk_valid: int          # attendable keys (kv_valid_len cut, else Lk)
     block_q: int
     block_k: int
     interpret: bool
+    q_seg: int = 0         # physical row where the q hi-offset segment starts
+    k_seg: int = 0         # (0 => unsplit: every row uses the hi offset)
+    delta: int = 0         # default causal anchor: full Lk - Lq (the oracle
+                           # anchors bottom-right at the full key length;
+                           # kv_valid_len only cuts, it does not re-anchor)
+
+
+def _default_band(p: FlashParams) -> jax.Array:
+    """Band scalars for the classic bottom-right-aligned static mask."""
+    return jnp.array([p.delta, p.delta, 0, 0, p.lk_valid], jnp.int32)
+
+
+def _q_log(r, band_ref, p: FlashParams):
+    """Logical sequence position of physical q row(s) ``r``."""
+    return _logical_pos(r, band_ref[0], band_ref[1], p.q_seg)
+
+
+def _k_log(c, band_ref, p: FlashParams):
+    """Logical sequence position of physical k column(s) ``c``."""
+    return _logical_pos(c, band_ref[2], band_ref[3], p.k_seg)
+
+
+def _run_predicate(q_start, k_start, band_ref, p: FlashParams):
+    """Whole-block skip test.  Logical positions are nondecreasing in the
+    physical index (the BandMask contract), so block extrema sit at the
+    block edges even when a block straddles the segment boundary."""
+    run = k_start < band_ref[4]
+    if p.causal:
+        run = jnp.logical_and(
+            run,
+            _k_log(k_start, band_ref, p)
+            <= _q_log(q_start + p.block_q - 1, band_ref, p))
+    if p.window is not None:
+        run = jnp.logical_and(
+            run,
+            _k_log(k_start + p.block_k - 1, band_ref, p)
+            >= _q_log(q_start, band_ref, p) - (p.window - 1))
+    return run
+
+
+def _tile_mask(q_start, k_start, band_ref, p: FlashParams):
+    """Elementwise (block_q, block_k) visibility mask."""
+    qi = q_start + jax.lax.broadcasted_iota(
+        jnp.int32, (p.block_q, p.block_k), 0)
+    kj = k_start + jax.lax.broadcasted_iota(
+        jnp.int32, (p.block_q, p.block_k), 1)
+    mask = kj < band_ref[4]
+    if p.causal or p.window is not None:
+        q_log = _q_log(qi, band_ref, p)
+        k_log = _k_log(kj, band_ref, p)
+        if p.causal:
+            mask &= k_log <= q_log
+        if p.window is not None:
+            mask &= k_log >= q_log - (p.window - 1)
+    return mask
 
 
 # ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------
 
-def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref,
-                *, p: FlashParams, nk: int, delta: int):
+def _fwd_kernel(band_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
+                acc_ref, m_ref, l_ref, *, p: FlashParams, nk: int):
     iq = pl.program_id(1)
     jk = pl.program_id(2)
 
@@ -60,17 +128,8 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref,
 
     q_start = iq * p.block_q
     k_start = jk * p.block_k
-    run = k_start < p.lk_valid
-    if p.causal:
-        # Last visible key for the last query row of this block.
-        run = jnp.logical_and(
-            run, k_start <= q_start + (p.block_q - 1) + delta)
-    if p.window is not None:
-        # First visible key for the first query row of this block.
-        run = jnp.logical_and(
-            run, k_start + p.block_k - 1 >= q_start + delta - (p.window - 1))
 
-    @pl.when(run)
+    @pl.when(_run_predicate(q_start, k_start, band_ref, p))
     def _compute():
         q = q_ref[0].astype(jnp.float32)            # (bq, d)
         k = k_ref[0].astype(jnp.float32)            # (bk, d)
@@ -80,15 +139,7 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref,
         if p.softcap:
             s = p.softcap * jnp.tanh(s / p.softcap)
 
-        qi = q_start + jax.lax.broadcasted_iota(
-            jnp.int32, (p.block_q, p.block_k), 0)
-        kj = k_start + jax.lax.broadcasted_iota(
-            jnp.int32, (p.block_q, p.block_k), 1)
-        mask = kj < p.lk_valid
-        if p.causal:
-            mask &= kj <= qi + delta
-        if p.window is not None:
-            mask &= kj >= qi + delta - (p.window - 1)
+        mask = _tile_mask(q_start, k_start, band_ref, p)
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_ref[...]
@@ -118,12 +169,13 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref,
         lse_ref[0] = jnp.where(l == 0.0, NEG_INF, shift + jnp.log(l_safe))
 
 
-def _fwd(q, k, v, p: FlashParams):
+def _fwd(q, k, v, p: FlashParams, band=None):
     """q: (B*Hq, Lq, D); k/v: (B*Hkv, Lk, D), heads folded major-to-minor.
 
     GQA is handled in the K/V index maps (kv row = q row // group), so the
-    replicated KV is never materialized.  Returns out (BH, Lq, D),
-    lse (BH, Lq) fp32.
+    replicated KV is never materialized.  ``band``: optional int32 (5,)
+    scalar-prefetch vector (see module docstring); defaults to the static
+    bottom-right band.  Returns out (BH, Lq, D), lse (BH, Lq) fp32.
     """
     bh, lq, d = q.shape
     bhkv, lk, _ = k.shape
@@ -131,36 +183,41 @@ def _fwd(q, k, v, p: FlashParams):
     group = bh // bhkv
     nq = lq // p.block_q
     nk = lk // p.block_k
-    delta = p.lk_valid - p.lq_valid
+    if band is None:
+        band = _default_band(p)
 
-    kernel = functools.partial(_fwd_kernel, p=p, nk=nk, delta=delta)
-    out, lse = pl.pallas_call(
-        kernel,
+    kernel = functools.partial(_fwd_kernel, p=p, nk=nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(bh, nq, nk),
         in_specs=[
-            pl.BlockSpec((1, p.block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, p.block_q, d), lambda b, i, j, s: (b, i, 0)),
             pl.BlockSpec((1, p.block_k, d),
-                         lambda b, i, j: (b // group, j, 0)),
+                         lambda b, i, j, s: (b // group, j, 0)),
             pl.BlockSpec((1, p.block_k, d),
-                         lambda b, i, j: (b // group, j, 0)),
+                         lambda b, i, j, s: (b // group, j, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, p.block_q, d), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, p.block_q), lambda b, i, j: (b, i)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((bh, lq, d), q.dtype),
-            jax.ShapeDtypeStruct((bh, lq), jnp.float32),
+            pl.BlockSpec((1, p.block_q, d), lambda b, i, j, s: (b, i, 0)),
+            pl.BlockSpec((1, p.block_q), lambda b, i, j, s: (b, i)),
         ],
         scratch_shapes=[
             pltpu.VMEM((p.block_q, d), jnp.float32),
             pltpu.VMEM((p.block_q,), jnp.float32),
             pltpu.VMEM((p.block_q,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+    )
+    out, lse = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, lq, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, lq), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=p.interpret,
-    )(q, k, v)
+    )(band, q, k, v)
     return out, lse
 
 
@@ -168,19 +225,12 @@ def _fwd(q, k, v, p: FlashParams):
 # Backward
 # ---------------------------------------------------------------------------
 
-def _recompute_p(q, k, q_start, k_start, p: FlashParams, delta):
+def _recompute_p(q, k, q_start, k_start, band_ref, p: FlashParams):
     """Recompute softcapped+masked scores; returns (s_capped, mask, s_raw)."""
     s_raw = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * p.scale
     s = p.softcap * jnp.tanh(s_raw / p.softcap) if p.softcap else s_raw
-    bq, bk = s.shape
-    qi = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-    kj = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-    mask = kj < p.lk_valid
-    if p.causal:
-        mask &= kj <= qi + delta
-    if p.window is not None:
-        mask &= kj >= qi + delta - (p.window - 1)
+    mask = _tile_mask(q_start, k_start, band_ref, p)
     return s, mask, s_raw
 
 
@@ -193,8 +243,8 @@ def _ds_from_dp(dp, pmat, s_capped, s_raw, p: FlashParams):
     return ds * p.scale
 
 
-def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref, dq_ref,
-               dq_acc, *, p: FlashParams, nk: int, delta: int):
+def _dq_kernel(band_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref,
+               dq_ref, dq_acc, *, p: FlashParams, nk: int):
     iq = pl.program_id(1)
     jk = pl.program_id(2)
 
@@ -204,15 +254,8 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref, dq_ref,
 
     q_start = iq * p.block_q
     k_start = jk * p.block_k
-    run = k_start < p.lk_valid
-    if p.causal:
-        run = jnp.logical_and(
-            run, k_start <= q_start + (p.block_q - 1) + delta)
-    if p.window is not None:
-        run = jnp.logical_and(
-            run, k_start + p.block_k - 1 >= q_start + delta - (p.window - 1))
 
-    @pl.when(run)
+    @pl.when(_run_predicate(q_start, k_start, band_ref, p))
     def _compute():
         q = q_ref[0].astype(jnp.float32)
         k = k_ref[0].astype(jnp.float32)
@@ -221,7 +264,7 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref, dq_ref,
         lse = lse_ref[0]
         dsum = dsum_ref[0]
 
-        s, mask, s_raw = _recompute_p(q, k, q_start, k_start, p, delta)
+        s, mask, s_raw = _recompute_p(q, k, q_start, k_start, band_ref, p)
         shift = jnp.where(lse <= NEG_INF / 2, 0.0, lse)
         pmat = jnp.where(mask, jnp.exp(s - shift[:, None]), 0.0)
         dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
@@ -236,28 +279,25 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref, dq_ref,
         dq_ref[0] = dq_acc[...].astype(dq_ref.dtype)
 
 
-def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref,
+def _dkv_kernel(band_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref,
                 dk_ref, dv_ref, dk_acc, dv_acc,
-                *, p: FlashParams, nq: int, delta: int):
+                *, p: FlashParams, nq: int, group: int):
+    """dk/dv for one KV head.  The innermost (sequential) grid dimension
+    runs over ``group * nq`` steps — all q blocks of every query head in
+    this KV head's group — so the group-summed gradients accumulate in the
+    VMEM scratch without ever materializing group-expanded K/V."""
     jk = pl.program_id(1)
-    iq = pl.program_id(2)
+    ig = pl.program_id(2)            # ig = g * nq + iq
 
-    @pl.when(iq == 0)
+    @pl.when(ig == 0)
     def _init():
         dk_acc[...] = jnp.zeros_like(dk_acc)
         dv_acc[...] = jnp.zeros_like(dv_acc)
 
-    q_start = iq * p.block_q
+    q_start = jax.lax.rem(ig, nq) * p.block_q
     k_start = jk * p.block_k
-    run = k_start < p.lk_valid
-    if p.causal:
-        run = jnp.logical_and(
-            run, k_start <= q_start + (p.block_q - 1) + delta)
-    if p.window is not None:
-        run = jnp.logical_and(
-            run, k_start + p.block_k - 1 >= q_start + delta - (p.window - 1))
 
-    @pl.when(run)
+    @pl.when(_run_predicate(q_start, k_start, band_ref, p))
     def _compute():
         q = q_ref[0].astype(jnp.float32)
         k = k_ref[0].astype(jnp.float32)
@@ -266,7 +306,7 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref,
         lse = lse_ref[0]
         dsum = dsum_ref[0]
 
-        s, mask, s_raw = _recompute_p(q, k, q_start, k_start, p, delta)
+        s, mask, s_raw = _recompute_p(q, k, q_start, k_start, band_ref, p)
         shift = jnp.where(lse <= NEG_INF / 2, 0.0, lse)
         pmat = jnp.where(mask, jnp.exp(s - shift[:, None]), 0.0)
         dv_acc[...] += jax.lax.dot_general(
@@ -279,67 +319,91 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref,
             ds, q, (((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
 
-    @pl.when(iq == nq - 1)
+    @pl.when(ig == group * nq - 1)
     def _finalize():
         dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
         dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
 
 
-def _bwd(q, k, v, out, lse, do, p: FlashParams):
+def _bwd(q, k, v, out, lse, do, p: FlashParams, band=None):
+    """Backward in the folded layout.  k/v may have fewer (KV) heads than
+    q (GQA); dk/dv come back at the KV head count, group-summed."""
     bh, lq, d = q.shape
-    _, lk, _ = k.shape
+    bhkv, lk, _ = k.shape
+    assert bh % bhkv == 0, (bh, bhkv)
+    group = bh // bhkv
     nq = lq // p.block_q
     nk = lk // p.block_k
-    delta = p.lk_valid - p.lq_valid
+    if band is None:
+        band = _default_band(p)
     dsum = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32),
                    axis=-1)  # (BH, Lq)
 
-    dq = pl.pallas_call(
-        functools.partial(_dq_kernel, p=p, nk=nk, delta=delta),
+    dq_grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(bh, nq, nk),
         in_specs=[
-            pl.BlockSpec((1, p.block_q, d), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, p.block_k, d), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, p.block_k, d), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, p.block_q, d), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, p.block_q), lambda b, i, j: (b, i)),
-            pl.BlockSpec((1, p.block_q), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, p.block_q, d), lambda b, i, j, s: (b, i, 0)),
+            pl.BlockSpec((1, p.block_k, d),
+                         lambda b, i, j, s: (b // group, j, 0)),
+            pl.BlockSpec((1, p.block_k, d),
+                         lambda b, i, j, s: (b // group, j, 0)),
+            pl.BlockSpec((1, p.block_q, d), lambda b, i, j, s: (b, i, 0)),
+            pl.BlockSpec((1, p.block_q), lambda b, i, j, s: (b, i)),
+            pl.BlockSpec((1, p.block_q), lambda b, i, j, s: (b, i)),
         ],
-        out_specs=pl.BlockSpec((1, p.block_q, d), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, lq, d), q.dtype),
+        out_specs=pl.BlockSpec((1, p.block_q, d),
+                               lambda b, i, j, s: (b, i, 0)),
         scratch_shapes=[pltpu.VMEM((p.block_q, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+    )
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, p=p, nk=nk),
+        grid_spec=dq_grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, lq, d), q.dtype),
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=p.interpret,
-    )(q, k, v, do, lse, dsum)
+    )(band, q, k, v, do, lse, dsum)
 
-    dk, dv = pl.pallas_call(
-        functools.partial(_dkv_kernel, p=p, nq=nq, delta=delta),
-        grid=(bh, nk, nq),
+    # Query-side operands walk b*group + ig//nq: for a fixed KV head, the
+    # sequential dimension visits each group member's q blocks in turn.
+    dkv_grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bhkv, nk, group * nq),
         in_specs=[
-            pl.BlockSpec((1, p.block_q, d), lambda b, j, i: (b, i, 0)),
-            pl.BlockSpec((1, p.block_k, d), lambda b, j, i: (b, j, 0)),
-            pl.BlockSpec((1, p.block_k, d), lambda b, j, i: (b, j, 0)),
-            pl.BlockSpec((1, p.block_q, d), lambda b, j, i: (b, i, 0)),
-            pl.BlockSpec((1, p.block_q), lambda b, j, i: (b, i)),
-            pl.BlockSpec((1, p.block_q), lambda b, j, i: (b, i)),
+            pl.BlockSpec((1, p.block_q, d),
+                         lambda b, j, g, s: (b * group + g // nq,
+                                             g % nq, 0)),
+            pl.BlockSpec((1, p.block_k, d), lambda b, j, g, s: (b, j, 0)),
+            pl.BlockSpec((1, p.block_k, d), lambda b, j, g, s: (b, j, 0)),
+            pl.BlockSpec((1, p.block_q, d),
+                         lambda b, j, g, s: (b * group + g // nq,
+                                             g % nq, 0)),
+            pl.BlockSpec((1, p.block_q),
+                         lambda b, j, g, s: (b * group + g // nq, g % nq)),
+            pl.BlockSpec((1, p.block_q),
+                         lambda b, j, g, s: (b * group + g // nq, g % nq)),
         ],
         out_specs=[
-            pl.BlockSpec((1, p.block_k, d), lambda b, j, i: (b, j, 0)),
-            pl.BlockSpec((1, p.block_k, d), lambda b, j, i: (b, j, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((bh, lk, d), k.dtype),
-            jax.ShapeDtypeStruct((bh, lk, d), v.dtype),
+            pl.BlockSpec((1, p.block_k, d), lambda b, j, g, s: (b, j, 0)),
+            pl.BlockSpec((1, p.block_k, d), lambda b, j, g, s: (b, j, 0)),
         ],
         scratch_shapes=[
             pltpu.VMEM((p.block_k, d), jnp.float32),
             pltpu.VMEM((p.block_k, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+    )
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, p=p, nq=nq, group=group),
+        grid_spec=dkv_grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bhkv, lk, d), k.dtype),
+            jax.ShapeDtypeStruct((bhkv, lk, d), v.dtype),
+        ],
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=p.interpret,
-    )(q, k, v, do, lse, dsum)
+    )(band, q, k, v, do, lse, dsum)
     return dq, dk, dv
 
 
@@ -365,19 +429,9 @@ def _flash_fwd_rule(q, k, v, p: FlashParams):
 
 def _flash_bwd_rule(p: FlashParams, res, do):
     q, k, v, out, lse = res
-    group = q.shape[0] // k.shape[0]
-    if group > 1:
-        # Expand KV across the query group for the dk/dv accumulation (the
-        # grid's batch dim is "parallel", so racing accumulators across the
-        # group is not allowed), then group-sum.
-        k_exp = jnp.repeat(k, group, axis=0)
-        v_exp = jnp.repeat(v, group, axis=0)
-        dq, dk_exp, dv_exp = _bwd(q, k_exp, v_exp, out, lse, do, p)
-        dk = dk_exp.reshape(k.shape[0], group, *k.shape[1:]).sum(axis=1)
-        dv = dv_exp.reshape(v.shape[0], group, *v.shape[1:]).sum(axis=1)
-        return dq, dk.astype(k.dtype), dv.astype(v.dtype)
-    dq, dk, dv = _bwd(q, k, v, out, lse, do, p)
-    return dq, dk, dv
+    # GQA dk/dv are group-summed inside the dkv kernel (the query group is
+    # folded into its sequential grid dimension) — no KV expansion here.
+    return _bwd(q, k, v, out, lse, do, p)
 
 
 _flash_folded.defvjp(_flash_fwd_rule, _flash_bwd_rule)

@@ -10,16 +10,41 @@ Three entry points:
 
 Layout everywhere: ``q (B, Lq, Hq, D)``, ``k/v (B, Lk, Hkv, D)``.
 
-``impl``:
-* ``"auto"``             — Pallas on TPU, ref elsewhere (CPU dry-run/compile
-                            keeps attention as plain einsums XLA can cost).
-* ``"pallas"``           — compiled Pallas kernel (TPU).
-* ``"pallas_interpret"`` — Pallas kernel body interpreted on CPU (tests).
-* ``"ref"``              — pure-jnp oracle.
+Impl dispatch
+-------------
+``impl`` picks the compute path; ``resolve_impl`` maps ``"auto"`` to the
+backend default:
+
+================== =========================================================
+``impl``           what runs
+================== =========================================================
+``"auto"``         ``"pallas"`` on TPU; ``"flashref"`` elsewhere (CPU
+                   dry-run/compile keeps attention as plain einsums XLA
+                   can cost).
+``"pallas"``       compiled Pallas kernel (TPU).  Traced ``mask_offset`` /
+                   ``band`` values ride in as scalar-prefetch operands, so
+                   **every Double-Ring step stays on the fused kernel** —
+                   there is no downgrade for dynamic offsets.
+``"pallas_interpret"`` same kernels, interpreted on CPU (tests/benches).
+``"flashref"``     q-chunked pure-jnp oracle (flash memory semantics).
+``"ref"``          dense pure-jnp oracle.
+================== =========================================================
+
+Masking
+-------
+``mask_offset`` (scalar, possibly traced) sets the bottom-right band
+``kj <= qi + mask_offset``; ``band`` (a ``ref.BandMask``) generalizes it to
+the segmented zigzag layout, letting one kernel call cover any ring-step
+pair (diagonal, j<i, j>i).  Both are honored identically by every impl.
+
+GQA
+---
+The Pallas forward and dq kernels fold the head group into the K/V index
+maps; the dk/dv kernel folds it into its sequential grid dimension and
+group-sums in VMEM scratch.  No path materializes ``group×``-expanded K/V
+or gradients.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +52,7 @@ import jax.numpy as jnp
 from repro.kernels import ref as ref_mod
 from repro.kernels.flash_attention import (FlashParams, _flash_folded,
                                            _fwd, _bwd)
+from repro.kernels.ref import BandMask
 
 NEG_INF = ref_mod.NEG_INF
 
@@ -58,7 +84,7 @@ def _unfold(x, b: int, h: int, l: int, d: int):
 
 
 def _make_params(q, k, *, causal, window, softcap, scale, kv_valid_len,
-                 block_q, block_k, interpret):
+                 block_q, block_k, interpret, q_seg=0, k_seg=0):
     _, lq, _, d = q.shape
     _, lk, _, _ = k.shape
     if scale is None:
@@ -69,7 +95,30 @@ def _make_params(q, k, *, causal, window, softcap, scale, kv_valid_len,
     return FlashParams(causal=causal, window=window, softcap=float(softcap),
                        scale=float(scale), lq_valid=int(lq),
                        lk_valid=int(lk_valid),
-                       block_q=bq, block_k=bk, interpret=interpret), bq, bk
+                       block_q=bq, block_k=bk, interpret=interpret,
+                       q_seg=int(q_seg), k_seg=int(k_seg),
+                       delta=int(lk - lq)), bq, bk
+
+
+def _band_scalars(band, mask_offset, lq: int, lk: int, kv_valid_len,
+                  *, causal, window):
+    """(int32 (5,) scalar-prefetch vector, q_seg, k_seg).
+
+    Offsets are in *unpadded* physical coordinates — padding appends rows,
+    so real rows keep their indices; padded keys are cut by ``kv_valid``.
+    """
+    if band is not None and not causal and window is None:
+        raise ValueError("band only shifts the causal/window band anchors; "
+                         "passing one with causal=False and window=None "
+                         "would be silently ignored")
+    if band is None:
+        off = (lk - lq) if mask_offset is None else mask_offset
+        band = BandMask.uniform(off)
+    kv_valid = lk if kv_valid_len is None else kv_valid_len
+    scalars = jnp.stack([jnp.asarray(x, jnp.int32) for x in
+                         (band.q_off_lo, band.q_off_hi,
+                          band.k_off_lo, band.k_off_hi, kv_valid)])
+    return scalars, band.q_seg, band.k_seg
 
 
 def flash_attention(q, k, v, *, causal: bool = False,
@@ -109,39 +158,44 @@ def flash_fwd_chunk(q, k, v, *, causal: bool = False,
                     window: int | None = None, softcap: float = 0.0,
                     scale: float | None = None,
                     kv_valid_len: int | None = None,
-                    mask_offset=None,
+                    mask_offset=None, band: BandMask | None = None,
                     impl: str = "auto",
                     block_q: int = 128, block_k: int = 128):
     """Non-differentiable (out, lse) — ring / decode building block.
 
     out (B, Lq, Hq, D);  lse (B, Hq, Lq) fp32.
 
-    ``mask_offset`` (possibly traced) forces the jnp path — the Pallas
-    kernel's block-skip logic needs static offsets.
+    ``mask_offset`` / ``band`` may be traced: the Pallas path threads them
+    into the kernel as scalar-prefetch operands and keeps its block-skip
+    logic (no downgrade to the jnp path).
     """
     impl = resolve_impl(impl)
-    if mask_offset is not None and impl == "pallas":
-        impl = "flashref"
     if impl == "flashref":
         return ref_mod.attention_ref_chunked(
             q, k, v, causal=causal, window=window, softcap=softcap,
-            scale=scale, kv_valid_len=kv_valid_len, mask_offset=mask_offset)
+            scale=scale, kv_valid_len=kv_valid_len, mask_offset=mask_offset,
+            band=band)
     if impl == "ref":
         return ref_mod.attention_ref(
             q, k, v, causal=causal, window=window, softcap=softcap,
-            scale=scale, kv_valid_len=kv_valid_len, mask_offset=mask_offset)
+            scale=scale, kv_valid_len=kv_valid_len, mask_offset=mask_offset,
+            band=band)
     interpret = impl == "pallas_interpret"
     b, lq, hq, d = q.shape
     _, lk, hkv, _ = k.shape
+    scalars, q_seg, k_seg = _band_scalars(band, mask_offset, lq, lk,
+                                          kv_valid_len, causal=causal,
+                                          window=window)
     p, bq, bk = _make_params(q, k, causal=causal, window=window,
                              softcap=softcap, scale=scale,
-                             kv_valid_len=kv_valid_len, block_q=block_q,
-                             block_k=block_k, interpret=interpret)
+                             kv_valid_len=None, block_q=block_q,
+                             block_k=block_k, interpret=interpret,
+                             q_seg=q_seg, k_seg=k_seg)
     d_pad = _round_up(d, 128)
     qf = _fold_pad(q, bq, d_pad)
     kf = _fold_pad(k, bk, d_pad)
     vf = _fold_pad(v, bk, d_pad)
-    out, lse = _fwd(qf, kf, vf, p)
+    out, lse = _fwd(qf, kf, vf, p, band=scalars)
     out = _unfold(out, b, hq, lq, d)
     lse = lse[:, :lq].reshape(b, hq, lq)
     return out, lse
@@ -151,50 +205,48 @@ def flash_bwd_chunk(q, k, v, out, lse, do, *, causal: bool = False,
                     window: int | None = None, softcap: float = 0.0,
                     scale: float | None = None,
                     kv_valid_len: int | None = None,
-                    mask_offset=None,
+                    mask_offset=None, band: BandMask | None = None,
                     impl: str = "auto",
                     block_q: int = 128, block_k: int = 128):
-    """Chunk backward given global (out, lse).  Returns (dq, dk, dv)."""
+    """Chunk backward given global (out, lse).  Returns (dq, dk, dv).
+
+    GQA gradients are group-summed inside the dk/dv kernel — no
+    ``group×``-expanded K/V is allocated on any path.
+    """
     impl = resolve_impl(impl)
-    if mask_offset is not None and impl == "pallas":
-        impl = "flashref"
     if impl == "flashref":
         return ref_mod.attention_bwd_ref_chunked(
             q, k, v, out, lse, do, causal=causal, window=window,
             softcap=softcap, scale=scale, kv_valid_len=kv_valid_len,
-            mask_offset=mask_offset)
+            mask_offset=mask_offset, band=band)
     if impl == "ref":
         return ref_mod.attention_bwd_ref(
             q, k, v, out, lse, do, causal=causal, window=window,
             softcap=softcap, scale=scale, kv_valid_len=kv_valid_len,
-            mask_offset=mask_offset)
+            mask_offset=mask_offset, band=band)
     interpret = impl == "pallas_interpret"
     b, lq, hq, d = q.shape
     _, lk, hkv, _ = k.shape
+    scalars, q_seg, k_seg = _band_scalars(band, mask_offset, lq, lk,
+                                          kv_valid_len, causal=causal,
+                                          window=window)
     p, bq, bk = _make_params(q, k, causal=causal, window=window,
                              softcap=softcap, scale=scale,
-                             kv_valid_len=kv_valid_len, block_q=block_q,
-                             block_k=block_k, interpret=interpret)
+                             kv_valid_len=None, block_q=block_q,
+                             block_k=block_k, interpret=interpret,
+                             q_seg=q_seg, k_seg=k_seg)
     d_pad = _round_up(d, 128)
-    group = hq // hkv
     qf = _fold_pad(q, bq, d_pad)
-    kf = _fold_pad(jnp.repeat(k, group, axis=2) if group > 1 else k,
-                   bk, d_pad)
-    vf = _fold_pad(jnp.repeat(v, group, axis=2) if group > 1 else v,
-                   bk, d_pad)
+    kf = _fold_pad(k, bk, d_pad)
+    vf = _fold_pad(v, bk, d_pad)
     outf = _fold_pad(out, bq, d_pad)
     dof = _fold_pad(do, bq, d_pad)
     lq_pad = qf.shape[1]
     lsef = lse.reshape(b * hq, lq)
     if lq_pad != lq:
         lsef = jnp.pad(lsef, ((0, 0), (0, lq_pad - lq)))
-    dqf, dkf, dvf = _bwd(qf, kf, vf, outf, lsef, dof, p)
+    dqf, dkf, dvf = _bwd(qf, kf, vf, outf, lsef, dof, p, band=scalars)
     dq = _unfold(dqf, b, hq, lq, d)
-    dk_exp = _unfold(dkf, b, hq, lk, d)
-    dv_exp = _unfold(dvf, b, hq, lk, d)
-    if group > 1:
-        dk = dk_exp.reshape(b, lk, hkv, group, d).sum(axis=3).astype(k.dtype)
-        dv = dv_exp.reshape(b, lk, hkv, group, d).sum(axis=3).astype(v.dtype)
-    else:
-        dk, dv = dk_exp, dv_exp
+    dk = _unfold(dkf, b, hkv, lk, d).astype(k.dtype)
+    dv = _unfold(dvf, b, hkv, lk, d).astype(v.dtype)
     return dq, dk, dv

@@ -21,31 +21,95 @@ Conventions
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
 
 NEG_INF = -1e30
 
 
+class BandMask(NamedTuple):
+    """Piecewise-affine logical-position mask — the scalar contract shared
+    by the oracle and the Pallas kernels (where the four offsets ride in as
+    scalar-prefetch operands).
+
+    Physical row ``r`` of the Q chunk has *logical* sequence position
+    ``r + q_off_lo`` when ``r < q_seg`` else ``r + q_off_hi`` (same for K
+    columns with ``k_*``).  Logical positions must be nondecreasing in the
+    physical index — true for both layouts we use:
+
+    * **uniform** — one offset per side; encodes the classic
+      ``kj <= qi + mask_offset`` bottom-right band.
+    * **zigzag** — rank ``i`` owns logical chunks ``(i, 2cp-1-i)``; the two
+      halves of the physical chunk get distinct offsets, which lets a single
+      kernel call evaluate any ring-step pair (diagonal, j<i, j>i) without
+      ``lax.cond`` branches.
+
+    Offsets may be traced scalars (``lax.axis_index`` functions); the
+    segment boundaries are static ints.
+    """
+    q_off_lo: jax.Array | int
+    q_off_hi: jax.Array | int
+    k_off_lo: jax.Array | int
+    k_off_hi: jax.Array | int
+    q_seg: int
+    k_seg: int
+
+    @classmethod
+    def uniform(cls, offset) -> "BandMask":
+        """``kj <= qi + offset`` (and window band) — both sides unsplit."""
+        return cls(offset, offset, 0, 0, 0, 0)
+
+    @classmethod
+    def zigzag(cls, i, j, c: int, cp: int) -> "BandMask":
+        """Local q owns logical chunks (i, 2cp-1-i) of size ``c``; visiting
+        kv owns (j, 2cp-1-j).  ``i``/``j`` may be traced rank indices."""
+        return cls(i * c, (2 * cp - 2 - i) * c,
+                   j * c, (2 * cp - 2 - j) * c, c, c)
+
+    def shift_q(self, q0: int) -> "BandMask":
+        """The band as seen by a q sub-chunk starting at physical ``q0``."""
+        return self._replace(q_off_lo=self.q_off_lo + q0,
+                             q_off_hi=self.q_off_hi + q0,
+                             q_seg=max(self.q_seg - q0, 0))
+
+
+def _logical_pos(idx, off_lo, off_hi, seg: int):
+    if seg == 0:
+        return idx + off_hi
+    return idx + jnp.where(idx < seg, off_lo, off_hi)
+
+
 def _build_mask(lq: int, lk: int, *, causal: bool, window: int | None,
                 kv_valid_len: int | None,
-                mask_offset=None) -> jax.Array | None:
+                mask_offset=None, band: BandMask | None = None
+                ) -> jax.Array | None:
     """Boolean (Lq, Lk) visibility mask, or None if everything is visible.
 
     ``mask_offset`` overrides the bottom-right alignment delta ``lk - lq``;
     it may be a traced scalar (ring attention passes the *logical* chunk
-    distance, which is rank-dependent under SPMD).
+    distance, which is rank-dependent under SPMD).  ``band`` generalizes it
+    to the segmented zigzag layout and takes precedence.
     """
+    if band is not None and not causal and window is None:
+        raise ValueError("band only shifts the causal/window band anchors; "
+                         "passing one with causal=False and window=None "
+                         "would be silently ignored")
     if not causal and window is None and kv_valid_len is None:
         return None
+    if band is None:
+        band = BandMask.uniform((lk - lq) if mask_offset is None
+                                else mask_offset)
     qi = jnp.arange(lq)[:, None]
     kj = jnp.arange(lk)[None, :]
-    delta = (lk - lq) if mask_offset is None else mask_offset
+    q_log = _logical_pos(qi, band.q_off_lo, band.q_off_hi, band.q_seg)
+    k_log = _logical_pos(kj, band.k_off_lo, band.k_off_hi, band.k_seg)
     mask = jnp.ones((lq, lk), dtype=bool)
     if causal:
-        mask &= kj <= qi + delta
+        mask &= k_log <= q_log
     if window is not None:
-        mask &= kj >= qi + delta - (window - 1)
+        mask &= k_log >= q_log - (window - 1)
     if kv_valid_len is not None:
         mask &= kj < kv_valid_len
     return mask
@@ -55,7 +119,7 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = False, window: int | None = None,
                   softcap: float = 0.0, scale: float | None = None,
                   kv_valid_len: int | None = None,
-                  mask_offset=None,
+                  mask_offset=None, band: BandMask | None = None,
                   bias: jax.Array | None = None):
     """Dense fp32 attention oracle.  Returns (out, lse).
 
@@ -83,7 +147,8 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     if bias is not None:
         s = s + jnp.transpose(bias.astype(jnp.float32), (0, 2, 1, 3))
     mask = _build_mask(lq, lk, causal=causal, window=window,
-                       kv_valid_len=kv_valid_len, mask_offset=mask_offset)
+                       kv_valid_len=kv_valid_len, mask_offset=mask_offset,
+                       band=band)
     if mask is not None:
         s = jnp.where(mask[None, :, None], s, NEG_INF)
 
@@ -106,7 +171,7 @@ def attention_bwd_ref(q, k, v, out, lse, do, *,
                       causal: bool = False, window: int | None = None,
                       softcap: float = 0.0, scale: float | None = None,
                       kv_valid_len: int | None = None,
-                      mask_offset=None):
+                      mask_offset=None, band: BandMask | None = None):
     """Chunk-level attention backward given *global* (out, lse).
 
     This is the ring-attention backward building block: ``lse``/``out`` are
@@ -133,7 +198,8 @@ def attention_bwd_ref(q, k, v, out, lse, do, *,
     s_raw = jnp.einsum("bihd,bjhd->bhij", qf, kf) * scale
     s = softcap * jnp.tanh(s_raw / softcap) if softcap else s_raw
     mask = _build_mask(lq, lk, causal=causal, window=window,
-                       kv_valid_len=kv_valid_len, mask_offset=mask_offset)
+                       kv_valid_len=kv_valid_len, mask_offset=mask_offset,
+                       band=band)
     shift = jnp.where(lse <= NEG_INF / 2, 0.0, lse)      # (B,H,Lq)
     p = jnp.exp(s - shift[..., None])
     if mask is not None:
@@ -194,9 +260,22 @@ def _chunked(fn, lq: int, q_chunk: int):
     return bounds, q_chunk
 
 
+def _chunk_band(band, mask_offset, lq: int, lk: int, q0: int, *,
+                causal, window) -> BandMask | None:
+    """The band for the q sub-chunk starting at physical ``q0`` (None when
+    no band geometry applies — nothing to re-anchor per chunk)."""
+    if not causal and window is None:
+        return None
+    if band is None:
+        band = BandMask.uniform((lk - lq) if mask_offset is None
+                                else mask_offset)
+    return band.shift_q(q0)
+
+
 def attention_ref_chunked(q, k, v, *, causal=False, window=None,
                           softcap=0.0, scale=None, kv_valid_len=None,
-                          mask_offset=None, q_chunk: int = 1024):
+                          mask_offset=None, band: BandMask | None = None,
+                          q_chunk: int = 1024):
     """Flash-semantics lowering of the oracle: scores materialize only per
     q-chunk (O(q_chunk × Lk)), matching what the Pallas kernel does in
     VMEM.  Python-unrolled so compiled FLOPs/bytes are exact.
@@ -209,16 +288,17 @@ def attention_ref_chunked(q, k, v, *, causal=False, window=None,
         return attention_ref(q, k, v, causal=causal, window=window,
                              softcap=softcap, scale=scale,
                              kv_valid_len=kv_valid_len,
-                             mask_offset=mask_offset)
+                             mask_offset=mask_offset, band=band)
     lk = k.shape[1]
-    base = (lk - lq) if mask_offset is None else mask_offset
     outs, lses = [], []
     for q0 in bounds:
         qc = q[:, q0:q0 + q_chunk]
         o, l = attention_ref(qc, k, v, causal=causal, window=window,
                              softcap=softcap, scale=scale,
                              kv_valid_len=kv_valid_len,
-                             mask_offset=base + q0)
+                             band=_chunk_band(band, mask_offset, lq, lk,
+                                              q0, causal=causal,
+                                              window=window))
         outs.append(o)
         lses.append(l)
     return (jnp.concatenate(outs, axis=1),
@@ -228,6 +308,7 @@ def attention_ref_chunked(q, k, v, *, causal=False, window=None,
 def attention_bwd_ref_chunked(q, k, v, out, lse, do, *, causal=False,
                               window=None, softcap=0.0, scale=None,
                               kv_valid_len=None, mask_offset=None,
+                              band: BandMask | None = None,
                               q_chunk: int = 1024):
     """q-chunked chunk-backward; dk/dv accumulate in fp32."""
     b, lq, hq, d = q.shape
@@ -236,9 +317,8 @@ def attention_bwd_ref_chunked(q, k, v, out, lse, do, *, causal=False,
         return attention_bwd_ref(q, k, v, out, lse, do, causal=causal,
                                  window=window, softcap=softcap,
                                  scale=scale, kv_valid_len=kv_valid_len,
-                                 mask_offset=mask_offset)
+                                 mask_offset=mask_offset, band=band)
     lk = k.shape[1]
-    base = (lk - lq) if mask_offset is None else mask_offset
     dqs = []
     dk = jnp.zeros(k.shape, jnp.float32)
     dv = jnp.zeros(v.shape, jnp.float32)
@@ -247,7 +327,9 @@ def attention_bwd_ref_chunked(q, k, v, out, lse, do, *, causal=False,
         dq_c, dk_c, dv_c = attention_bwd_ref(
             q[:, sl], k, v, out[:, sl], lse[:, :, sl], do[:, sl],
             causal=causal, window=window, softcap=softcap, scale=scale,
-            kv_valid_len=kv_valid_len, mask_offset=base + q0)
+            kv_valid_len=kv_valid_len,
+            band=_chunk_band(band, mask_offset, lq, lk, q0,
+                             causal=causal, window=window))
         dqs.append(dq_c)
         dk = dk + dk_c.astype(jnp.float32)
         dv = dv + dv_c.astype(jnp.float32)

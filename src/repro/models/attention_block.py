@@ -15,7 +15,8 @@ from jax.ad_checkpoint import checkpoint_name
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.attention2d import Attn2DConfig, attention_2d, _shard_map
+from repro.core.attention2d import Attn2DConfig, attention_2d
+from repro.core.runtime import shard_map_compat as _shard_map
 from repro.core.runtime import Runtime
 from repro.core.topology import (AXIS_HP, AXIS_INNER, AXIS_OUTER, BATCH_AXES,
                                  SEQ_AXES)

@@ -268,7 +268,7 @@ def _cross_decode(p, x, cache, rt, cfg: ModelConfig):
     def local(q, k, v):
         return flash_attention(q, k, v, causal=False, impl="ref")
 
-    from repro.core.attention2d import _shard_map
+    from repro.core.runtime import shard_map_compat as _shard_map
     spec_q = P(rt.batch_axes, None, AXIS_HP, None)
     spec_kv = P(rt.batch_axes, None, AXIS_HP, None)
     out = _shard_map(local, rt.mesh, (spec_q, spec_kv, spec_kv),

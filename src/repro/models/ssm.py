@@ -30,7 +30,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.attention2d import _shard_map
+from repro.core.runtime import axis_size_compat
+from repro.core.runtime import shard_map_compat as _shard_map
 from repro.core.runtime import Runtime
 from repro.core.topology import BATCH_AXES, SEQ_AXES
 from repro.models.layers import (init_linear, init_rmsnorm, linear_apply,
@@ -139,7 +140,7 @@ def _cross_rank_state(d_tot, h_fin, axes, n_ranks: int):
 def _linear_rank(axes):
     idx = lax.axis_index(axes[0])
     for a in axes[1:]:
-        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+        idx = idx * axis_size_compat(a) + lax.axis_index(a)
     return idx
 
 

@@ -140,6 +140,68 @@ def check_attention_modes():
     print("PASS attention_modes")
 
 
+def check_ring_pallas_path():
+    """Double-ring 2D-Attention on ``impl="pallas_interpret"``: the traced
+    (axis_index-derived) band offsets must stay on the Pallas kernels — the
+    jnp fallbacks are poisoned to prove no silent flashref downgrade — and
+    out + grads must match the single-device oracle."""
+    from repro.core.topology import ParallelConfig, make_mesh
+    from repro.core.attention2d import Attn2DConfig, attention_2d
+    from repro.core.zigzag import to_zigzag, from_zigzag
+    from repro.kernels import ref as ref_mod
+    from repro.kernels.ref import attention_ref
+
+    rng = np.random.default_rng(3)
+    B, S, H, HKV, D = 1, 64, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, HKV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, HKV, D)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+
+    cases = [dict(window=None, softcap=0.0),
+             dict(window=12, softcap=20.0)]
+    pc = ParallelConfig(dp=1, hp=2, cp_outer=2, cp_inner=2)
+    mesh = make_mesh(pc)
+    cp = pc.cp
+
+    def boom(*a, **kw):
+        raise AssertionError("jnp fallback selected on the ring path")
+
+    poisoned = ("attention_ref_chunked", "attention_bwd_ref_chunked")
+    saved = {n: getattr(ref_mod, n) for n in poisoned}
+    for case in cases:
+        def oracle(q, k, v):
+            out, _ = attention_ref(q, k, v, causal=True, **case)
+            return (out * w).sum(), out
+
+        (_, o_ref), g_ref = jax.value_and_grad(
+            oracle, argnums=(0, 1, 2), has_aux=True)(q, k, v)
+
+        cfg = Attn2DConfig(hp=2, n_out=2, w=2, causal=True,
+                           impl="pallas_interpret", **case)
+
+        def dist(q, k, v):
+            qz, kz, vz = (to_zigzag(x, cp) for x in (q, k, v))
+            with mesh:
+                out = attention_2d(qz, kz, vz, mesh=mesh, cfg=cfg)
+            out = from_zigzag(out, cp)
+            return (out * w).sum(), out
+
+        for n in poisoned:
+            setattr(ref_mod, n, boom)
+        try:
+            with mesh:
+                (_, o_d), g_d = jax.value_and_grad(
+                    dist, argnums=(0, 1, 2), has_aux=True)(q, k, v)
+        finally:
+            for n, fn in saved.items():
+                setattr(ref_mod, n, fn)
+        assert err(o_d, o_ref) < 5e-5, (case, err(o_d, o_ref))
+        for a, b in zip(g_d, g_ref):
+            assert err(a, b) < 5e-5, case
+    print("PASS ring_pallas_path")
+
+
 def check_ssm():
     from repro.core.topology import ParallelConfig
     from repro.models.ssm import (Mamba1Dims, Mamba2Dims, init_mamba1,
@@ -267,7 +329,7 @@ def check_decode_consistency():
 def check_grad_compression():
     """int8 error-feedback psum inside shard_map over the data axis."""
     from jax.sharding import PartitionSpec as P
-    from repro.core.attention2d import _shard_map
+    from repro.core.runtime import shard_map_compat as _shard_map
     from repro.core.topology import ParallelConfig, make_mesh, AXIS_DATA
     from repro.train.optimizer import compressed_psum
 

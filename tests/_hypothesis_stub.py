@@ -1,0 +1,72 @@
+"""Tiny deterministic stand-in for ``hypothesis`` (see conftest.py).
+
+Installed into ``sys.modules`` only when the real package is missing, so
+``from hypothesis import given, settings, strategies as st`` keeps working
+and the property tests still run — each as a fixed-seed sweep of a handful
+of drawn examples rather than a shrinking search.  Only the strategy
+surface these tests use is provided (``integers``, ``sampled_from``).
+"""
+from __future__ import annotations
+
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+#: fallback sweep size; the real library's max_examples is honored up to
+#: this cap so the no-deps path stays fast.
+MAX_EXAMPLES_CAP = 10
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(
+        lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+
+def given(**strategies):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = min(getattr(wrapper, "_stub_max_examples",
+                            MAX_EXAMPLES_CAP), MAX_EXAMPLES_CAP)
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                draw = {name: s._draw(rng)
+                        for name, s in strategies.items()}
+                fn(*args, **draw, **kwargs)
+        # Present the signature minus the drawn params (and without
+        # ``__wrapped__``) so pytest doesn't look for same-named fixtures.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for name, p in sig.parameters.items()
+                        if name not in strategies])
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = MAX_EXAMPLES_CAP, deadline=None, **_):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.SearchStrategy = SearchStrategy
+strategies.integers = integers
+strategies.sampled_from = sampled_from

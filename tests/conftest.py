@@ -7,6 +7,21 @@ import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:                                    # pragma: no cover
+    import hypothesis                   # noqa: F401
+except ImportError:
+    # Property tests degrade to a deterministic fixed-seed sweep (see
+    # _hypothesis_stub.py) instead of failing collection.  ``pip install
+    # -r requirements-dev.txt`` restores the real shrinking search.
+    import importlib.util
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_stub.py"))
+    _stub = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_stub)
+    sys.modules["hypothesis"] = _stub
+    sys.modules["hypothesis.strategies"] = _stub.strategies
+
 
 @pytest.fixture(scope="session")
 def single_runtime():

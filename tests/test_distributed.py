@@ -6,8 +6,8 @@ import sys
 
 import pytest
 
-_CHECKS = ["attention_grid", "attention_modes", "ssm", "moe", "e2e_loss",
-           "decode_consistency", "grad_compression"]
+_CHECKS = ["attention_grid", "attention_modes", "ring_pallas_path", "ssm",
+           "moe", "e2e_loss", "decode_consistency", "grad_compression"]
 
 
 @pytest.mark.parametrize("check", _CHECKS)

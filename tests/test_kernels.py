@@ -147,3 +147,146 @@ def test_window_is_band_subset(seed, window):
     o_bias, _ = ref.attention_ref(q, k, v,
                                   bias=jnp.asarray(bias)[None, None])
     np.testing.assert_allclose(o_win, o_bias, atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Scalar-prefetch band masks: traced offsets stay on the Pallas kernel
+# ---------------------------------------------------------------------------
+
+BAND_SWEEP = [
+    # b, lq, lk, hq, hkv, d, window, softcap
+    (1, 32, 48, 4, 4, 16, None, 0.0),
+    (1, 32, 48, 4, 2, 16, None, 0.0),     # GQA
+    (2, 24, 40, 4, 1, 24, None, 0.0),     # MQA + padding
+    (1, 32, 48, 4, 2, 16, 12, 0.0),       # sliding window
+    (1, 32, 48, 4, 2, 16, None, 20.0),    # softcap
+    (1, 32, 48, 6, 3, 16, 10, 25.0),      # window + softcap + GQA
+]
+
+
+@pytest.mark.parametrize("case", BAND_SWEEP,
+                         ids=[str(i) for i in range(len(BAND_SWEEP))])
+def test_fwd_chunk_traced_mask_offset(case):
+    """A *traced* mask_offset must dispatch to the Pallas kernel (no
+    flashref downgrade) and match the oracle."""
+    b, lq, lk, hq, hkv, d, window, cap = case
+    q, k, v = t((b, lq, hq, d)), t((b, lk, hkv, d)), t((b, lk, hkv, d))
+
+    @jax.jit
+    def f(off):
+        return ops.flash_fwd_chunk(q, k, v, causal=True, window=window,
+                                   softcap=cap, mask_offset=off,
+                                   impl="pallas_interpret",
+                                   block_q=16, block_k=16)
+
+    for off in (16, 0, 40):
+        o_p, lse_p = f(jnp.int32(off))
+        o_ref, lse_ref = ref.attention_ref(q, k, v, causal=True,
+                                           window=window, softcap=cap,
+                                           mask_offset=off)
+        np.testing.assert_allclose(o_p, o_ref, atol=1e-4, rtol=1e-4)
+        mask = lse_ref > ref.NEG_INF / 2
+        assert ((np.asarray(lse_p) > ref.NEG_INF / 2) == mask).all()
+        np.testing.assert_allclose(np.where(mask, lse_p, 0.0),
+                                   np.where(mask, lse_ref, 0.0),
+                                   atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("case", BAND_SWEEP,
+                         ids=[str(i) for i in range(len(BAND_SWEEP))])
+def test_bwd_chunk_traced_mask_offset(case):
+    b, lq, lk, hq, hkv, d, window, cap = case
+    q, k, v = t((b, lq, hq, d)), t((b, lk, hkv, d)), t((b, lk, hkv, d))
+    out, lse = ref.attention_ref(q, k, v, causal=True, window=window,
+                                 softcap=cap, mask_offset=16)
+    do = t(out.shape)
+
+    @jax.jit
+    def g(off):
+        return ops.flash_bwd_chunk(q, k, v, out, lse, do, causal=True,
+                                   window=window, softcap=cap,
+                                   mask_offset=off, impl="pallas_interpret",
+                                   block_q=16, block_k=16)
+
+    g_p = g(jnp.int32(16))
+    g_ref = ref.attention_bwd_ref(q, k, v, out, lse, do, causal=True,
+                                  window=window, softcap=cap, mask_offset=16)
+    for a, b_ in zip(g_p, g_ref):
+        assert a.shape == b_.shape
+        np.testing.assert_allclose(a, b_, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("window,cap", [(None, 0.0), (6, 0.0), (None, 20.0)])
+def test_zigzag_band_all_step_pairs(window, cap):
+    """One kernel call per ring step: the zigzag BandMask must reproduce
+    every (i, j) case — diagonal, past, future — for fwd and bwd."""
+    from repro.kernels.ref import BandMask
+    c, cp = 8, 4
+    q, k, v = t((1, 16, 4, 16)), t((1, 16, 2, 16)), t((1, 16, 2, 16))
+
+    @jax.jit
+    def f(i, j):
+        return ops.flash_fwd_chunk(q, k, v, causal=True, window=window,
+                                   softcap=cap,
+                                   band=BandMask.zigzag(i, j, c, cp),
+                                   impl="pallas_interpret",
+                                   block_q=8, block_k=8)
+
+    @jax.jit
+    def g(i, j, out, lse, do):
+        return ops.flash_bwd_chunk(q, k, v, out, lse, do, causal=True,
+                                   window=window, softcap=cap,
+                                   band=BandMask.zigzag(i, j, c, cp),
+                                   impl="pallas_interpret",
+                                   block_q=8, block_k=8)
+
+    for i in range(cp):
+        for j in range(cp):
+            band = BandMask.zigzag(i, j, c, cp)
+            o_ref, lse_ref = ref.attention_ref(q, k, v, causal=True,
+                                               window=window, softcap=cap,
+                                               band=band)
+            o_p, lse_p = f(jnp.int32(i), jnp.int32(j))
+            np.testing.assert_allclose(o_p, o_ref, atol=1e-4, rtol=1e-4,
+                                       err_msg=f"fwd i={i} j={j}")
+            mask = np.asarray(lse_ref) > ref.NEG_INF / 2
+            assert ((np.asarray(lse_p) > ref.NEG_INF / 2) == mask).all(), \
+                (i, j)
+            do = t(o_ref.shape)
+            g_p = g(jnp.int32(i), jnp.int32(j), o_ref, lse_ref, do)
+            g_ref = ref.attention_bwd_ref(q, k, v, o_ref, lse_ref, do,
+                                          causal=True, window=window,
+                                          softcap=cap, band=band)
+            for a, b_ in zip(g_p, g_ref):
+                np.testing.assert_allclose(a, b_, atol=1e-4, rtol=1e-4,
+                                           err_msg=f"bwd i={i} j={j}")
+
+
+def test_bwd_gqa_no_expanded_kv():
+    """The GQA backward must not allocate group-expanded K/V: no
+    intermediate of shape (B*Hq, Lk_pad, D_pad) may appear in the jaxpr."""
+    b, lq, lk, hq, hkv, d = 1, 32, 48, 4, 2, 16
+    q, k, v = t((b, lq, hq, d)), t((b, lk, hkv, d)), t((b, lk, hkv, d))
+    out, lse = ref.attention_ref(q, k, v, causal=True)
+    do = t(out.shape)
+
+    def g(q, k, v, out, lse, do):
+        return ops.flash_bwd_chunk(q, k, v, out, lse, do, causal=True,
+                                   impl="pallas_interpret",
+                                   block_q=16, block_k=16)
+
+    jaxpr = jax.make_jaxpr(g)(q, k, v, out, lse, do)
+    lk_pad, d_pad = 48, 128
+    expanded = (b * hq, lk_pad, d_pad)      # what jnp.repeat used to make
+
+    def shapes(jp):
+        for eqn in jp.eqns:
+            for var in eqn.outvars:
+                yield tuple(getattr(var.aval, "shape", ()))
+            for sub in eqn.params.values():
+                if hasattr(sub, "jaxpr"):
+                    yield from shapes(sub.jaxpr)
+
+    assert expanded not in set(shapes(jaxpr.jaxpr))
+    dq, dk, dv = g(q, k, v, out, lse, do)
+    assert dk.shape == k.shape and dv.shape == v.shape

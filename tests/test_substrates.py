@@ -57,8 +57,12 @@ def test_zigzag_roundtrip_array():
 
 def test_zero_leaf_rules():
     # leaf_spec only reads mesh.shape — an abstract 8-way mesh suffices
-    mesh = jax.sharding.AbstractMesh(
-        (1, 2, 2, 1, 2), ("pod", "data", "head", "outer", "inner"))
+    names = ("pod", "data", "head", "outer", "inner")
+    sizes = (1, 2, 2, 1, 2)
+    try:
+        mesh = jax.sharding.AbstractMesh(sizes, names)
+    except TypeError:   # older spelling: tuple of (name, size) pairs
+        mesh = jax.sharding.AbstractMesh(tuple(zip(names, sizes)))
     # big leaf divisible by full group (8) -> sharded on largest dim
     spec = leaf_spec((128, 512), mesh)
     assert spec[1] is not None
