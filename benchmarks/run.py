@@ -181,22 +181,19 @@ def micro_train_step():
     import jax
     import jax.numpy as jnp
     from repro.configs import get_reduced
-    from repro.core.runtime import Runtime
-    from repro.core.topology import ParallelConfig, make_mesh
-    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.core.plan import build_plan
+    from repro.data.pipeline import SyntheticLM
     from repro.models.model import forward_loss, init_params
 
-    pc = ParallelConfig()
-    mesh = make_mesh(pc, devices=jax.devices()[:1])
-    rt = Runtime(mesh=mesh, pc=pc, impl="ref")
     for arch in ("qwen3-1.7b", "falcon-mamba-7b", "qwen3-moe-30b-a3b"):
         cfg = get_reduced(arch)
+        plan = build_plan(cfg, devices=jax.devices()[:1], impl="ref",
+                          seq_len=64, global_batch=4)
+        rt = plan.rt
         params = init_params(cfg, jax.random.PRNGKey(0))
-        data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=64,
-                                      global_batch=4, cp=1, zigzag=False),
-                           cfg)
+        data = SyntheticLM(plan.data_config(64, 4, zigzag=False), cfg)
         batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
-        with mesh:
+        with plan.mesh:
             g = jax.jit(jax.grad(
                 lambda p: forward_loss(p, batch, rt, cfg)[0]))
             jax.block_until_ready(g(params))
@@ -208,10 +205,74 @@ def micro_train_step():
         _row(f"micro.train_step.{arch}", us, "reduced-config grad step")
 
 
+def bench_train_step(out_path: str = "BENCH_train_step.json"):
+    """Gradient-accumulation sweep + sync-free-trainer-loop measurement,
+    written to ``BENCH_train_step.json``.
+
+    For ``grad_accum`` ∈ {1, 2, 4} at a fixed global batch, times the
+    full jitted train step (fwd+bwd+AdamW) and derives steps/s.  For
+    each, the driving loop is timed two ways: ``sync`` calls
+    ``float(metrics["loss"])`` every step (the seed trainer's per-step
+    device sync) and ``async`` only materializes at the end (the current
+    trainer's ``log_every`` behaviour) — the gap is the dispatch
+    pipelining recovered by keeping metrics on device.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_reduced
+    from repro.core.plan import build_plan
+    from repro.data.pipeline import SyntheticLM
+    from repro.models.model import init_params
+    from repro.train.optimizer import init_opt_state
+    from repro.train.train_step import jit_train_step
+
+    cfg = get_reduced("qwen3-1.7b")
+    gb, seq, n = 8, 64, 8
+    bench = {"config": {"arch": cfg.name, "global_batch": gb,
+                        "seq_len": seq, "steps": n}, "cases": []}
+    for accum in (1, 2, 4):
+        plan = build_plan(cfg, devices=jax.devices()[:1], impl="ref",
+                          grad_accum=accum, seq_len=seq, global_batch=gb)
+        data = SyntheticLM(plan.data_config(seq, gb), cfg)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        with plan.mesh:
+            step, p_sh, o_sh = jit_train_step(plan, params, donate=False)
+            opt = init_opt_state(params)
+            batches = [{k: jnp.asarray(v) for k, v in data.batch(i).items()}
+                       for i in range(n)]
+            jax.block_until_ready(step(params, opt, batches[0]))
+
+            def loop(sync: bool):
+                p, o = params, opt
+                t0 = time.perf_counter()
+                for i in range(n):
+                    p, o, m = step(p, o, batches[i])
+                    if sync:
+                        float(m["loss"])
+                jax.block_until_ready((p, o))
+                return n / (time.perf_counter() - t0)
+
+            sps_sync, sps_async = loop(True), loop(False)
+        bench["cases"].append({"grad_accum": accum,
+                               "steps_per_s_sync": round(sps_sync, 3),
+                               "steps_per_s_async": round(sps_async, 3)})
+        _row(f"micro.accum{accum}.sync", 1e6 / sps_sync,
+             f"steps_per_s={sps_sync:.2f}")
+        _row(f"micro.accum{accum}.async", 1e6 / sps_async,
+             f"steps_per_s={sps_async:.2f};"
+             f"speedup={sps_async / sps_sync:.2f}x")
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=2)
+
+
 def main() -> None:
     if len(sys.argv) > 1 and sys.argv[1] == "ring":
         print("name,us_per_call,derived")
         micro_ring_step()
+        return
+    if len(sys.argv) > 1 and sys.argv[1] == "train":
+        print("name,us_per_call,derived")
+        bench_train_step()
         return
     print("name,us_per_call,derived")
     t2_endtoend()
@@ -222,6 +283,7 @@ def main() -> None:
     micro_kernel_interpret()
     micro_ring_step()
     micro_train_step()
+    bench_train_step()
 
 
 if __name__ == "__main__":

@@ -8,9 +8,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 from repro.configs import get_reduced
-from repro.core.runtime import Runtime
-from repro.core.topology import ParallelConfig, make_mesh
-from repro.data.pipeline import DataConfig
+from repro.core.plan import build_plan
 from repro.runtime.resilience import elastic_plan
 from repro.train.optimizer import OptConfig
 from repro.train.trainer import Trainer, TrainerConfig
@@ -20,13 +18,11 @@ def main():
     cfg = get_reduced("qwen3-1.7b")
     with tempfile.TemporaryDirectory() as d:
         def mk(steps):
-            pc = ParallelConfig()
-            mesh = make_mesh(pc, devices=jax.devices()[:1])
-            rt = Runtime(mesh=mesh, pc=pc, impl="ref")
-            return Trainer(cfg, rt,
-                           OptConfig(lr=3e-3, total_steps=steps),
-                           DataConfig(vocab=cfg.vocab, seq_len=64,
-                                      global_batch=8, cp=1),
+            plan = build_plan(cfg,
+                              opt=OptConfig(lr=3e-3, total_steps=steps),
+                              devices=jax.devices()[:1],
+                              seq_len=64, global_batch=8)
+            return Trainer(plan, plan.data_config(64, 8),
                            TrainerConfig(num_steps=steps, ckpt_dir=d,
                                          ckpt_every=10, log_every=10))
 

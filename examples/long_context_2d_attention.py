@@ -12,8 +12,10 @@ if "XLA_FLAGS" not in os.environ:
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax, jax.numpy as jnp, numpy as np
-from repro.core.topology import ParallelConfig, make_mesh
-from repro.core.attention2d import Attn2DConfig, attention_2d
+from repro.configs import get_reduced
+from repro.core.plan import build_plan
+from repro.core.topology import ParallelConfig
+from repro.core.attention2d import attention_2d
 from repro.core.zigzag import to_zigzag, from_zigzag
 from repro.kernels.ref import attention_ref
 
@@ -25,11 +27,14 @@ def main():
     k = jnp.asarray(rng.standard_normal((B, S, HKV, D)), jnp.float32)
     v = jnp.asarray(rng.standard_normal((B, S, HKV, D)), jnp.float32)
 
-    # hp=2 × (outer=2 × inner=2) = 8-way sequence parallelism
+    # hp=2 × (outer=2 × inner=2) = 8-way sequence parallelism; the plan
+    # owns the mesh/placement and the Attn2DConfig
     pc = ParallelConfig(hp=2, cp_outer=2, cp_inner=2,
                         placement="context_first")
-    mesh = make_mesh(pc)
-    cfg = Attn2DConfig(hp=2, n_out=2, w=2, causal=True, impl="ref")
+    plan = build_plan(get_reduced("qwen3-1.7b"), pc, impl="ref")
+    print(plan.describe())
+    mesh = plan.mesh
+    cfg = plan.attn2d(causal=True, zigzag=True)
 
     def loss(q, k, v):
         qz, kz, vz = (to_zigzag(x, pc.cp) for x in (q, k, v))

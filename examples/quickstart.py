@@ -10,9 +10,7 @@ import logging
 import jax
 
 from repro.configs import get_reduced
-from repro.core.runtime import Runtime
-from repro.core.topology import ParallelConfig, make_mesh
-from repro.data.pipeline import DataConfig
+from repro.core.plan import build_plan
 from repro.train.optimizer import OptConfig
 from repro.train.trainer import Trainer, TrainerConfig
 
@@ -20,14 +18,15 @@ from repro.train.trainer import Trainer, TrainerConfig
 def main():
     logging.basicConfig(level=logging.INFO)
     cfg = get_reduced("qwen3-1.7b")
-    pc = ParallelConfig()                       # 1 device; scale via fields
-    mesh = make_mesh(pc, devices=jax.devices()[:1])
-    rt = Runtime(mesh=mesh, pc=pc, impl="ref")
-    trainer = Trainer(
-        cfg, rt,
-        OptConfig(lr=3e-3, warmup_steps=5, total_steps=60),
-        DataConfig(vocab=cfg.vocab, seq_len=128, global_batch=8, cp=pc.cp),
-        TrainerConfig(num_steps=60, log_every=10))
+    # one plan = mesh + placement + ZeRO + remat + microbatching; scale by
+    # passing a bigger ParallelConfig / grad_accum
+    plan = build_plan(cfg, opt=OptConfig(lr=3e-3, warmup_steps=5,
+                                         total_steps=60),
+                      devices=jax.devices()[:1], grad_accum=2,
+                      seq_len=128, global_batch=8)
+    print(plan.describe())
+    trainer = Trainer(plan, plan.data_config(seq_len=128, global_batch=8),
+                      TrainerConfig(num_steps=60, log_every=10))
     losses = trainer.run()
     print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} (should decrease)")
     assert losses[-1] < losses[0]

@@ -8,23 +8,20 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax, jax.numpy as jnp
 from repro.configs import get_reduced
-from repro.core.runtime import Runtime
-from repro.core.topology import ParallelConfig, make_mesh
+from repro.core.plan import build_plan
 from repro.launch.serve import generate
 from repro.models.model import init_params
 
 
 def main():
-    pc = ParallelConfig()
-    mesh = make_mesh(pc, devices=jax.devices()[:1])
-    rt = Runtime(mesh=mesh, pc=pc, impl="ref")
     for arch in ("qwen3-1.7b", "deepseek-v2-lite-16b", "falcon-mamba-7b"):
         cfg = get_reduced(arch)
+        plan = build_plan(cfg, devices=jax.devices()[:1])
         params = init_params(cfg, jax.random.PRNGKey(0))
         tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0,
                                     cfg.vocab)
-        with mesh:
-            out = generate(params, cfg, rt, tokens, gen=8)
+        with plan.mesh:
+            out = generate(params, cfg, plan.rt, tokens, gen=8)
         print(f"{arch}: prompt (2, 24) -> generated {out.shape}")
 
 

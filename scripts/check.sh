@@ -1,8 +1,11 @@
 #!/usr/bin/env bash
-# Tier-1 gate + ring micro-benchmark.  Run from anywhere:
+# Tier-1 gate + benches + plan smoke.  Run from anywhere:
 #     scripts/check.sh
-# Tests must pass; the bench rewrites BENCH_ring.json so perf regressions
-# on the ring hot path show up in the BENCH_* trajectory.
+# Tests must pass; the benches rewrite BENCH_ring.json /
+# BENCH_train_step.json so perf regressions on the ring hot path and the
+# (accumulated) train step show up in the BENCH_* trajectory; the dryrun
+# --plan invocation fails fast on ExecutionPlan regressions for every
+# production cell of one arch without compiling anything.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -10,3 +13,5 @@ export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
 python benchmarks/run.py ring
+python benchmarks/run.py train
+python -m repro.launch.dryrun --plan --arch qwen3-1.7b --shape all

@@ -75,6 +75,17 @@ class Attn2DConfig(NamedTuple):
         return self.n_out * self.w
 
 
+def attn2d_config(pc, *, impl: str, causal: bool = True,
+                  zigzag: bool = True, window: int | None = None,
+                  softcap: float = 0.0,
+                  scale: float | None = None) -> Attn2DConfig:
+    """The one place a ``ParallelConfig`` becomes an ``Attn2DConfig``
+    (used by ``core/plan.py`` and the model attention blocks)."""
+    return Attn2DConfig(hp=pc.hp, n_out=pc.cp_outer, w=pc.cp_inner,
+                        causal=causal, zigzag=zigzag, window=window,
+                        softcap=softcap, scale=scale, impl=impl)
+
+
 class RingConfig(NamedTuple):
     """Static ring configuration (the custom_vjp nondiff arg)."""
     n_out: int

@@ -1,0 +1,346 @@
+"""ExecutionPlan: the single planning layer for every cross-layer decision.
+
+LoongTrain's system contribution is the *composition* of head×context
+placement (§4.4), hybrid ZeRO (§5.1), and Selective Checkpoint++ (§5.2)
+tuned together per workload.  ``build_plan`` makes all of those choices
+once, from ``(ParallelConfig, ModelConfig, OptConfig, memory budget)``,
+and every entry point — launchers, trainer, dry-run, examples — consumes
+the resulting ``ExecutionPlan`` instead of re-deriving mesh/sharding
+facts:
+
+* **mesh** — the 5-axis LoongTrain mesh (built from a flat device list or
+  refined from a production ``(pod, data, model)`` grid) with the
+  head-first / context-first placement strategy.
+* **hybrid ZeRO** — the sharding extent (Full-Replica / dp / sp / dp×sp,
+  AMSP's three modes) is chosen from a parameter+optimizer memory model:
+  the *least* sharded extent whose state fits the per-device budget wins,
+  minimizing collective latency (the seed hardcoded most-sharded-first).
+* **remat** — ``none | full | scpp`` from an activation estimate when
+  asked for ``"auto"``; the decision lands in ``cfg.remat`` so the model
+  stack reads one source of truth.
+* **gradient accumulation** — ``grad_accum`` microbatches per step; the
+  plan owns the ``(accum, microbatch, ...)`` batch layout and shardings.
+* **Attn2DConfig / batch / param / opt shardings** — derived here only.
+
+``plan.describe()`` prints the whole story as one table, so train, serve
+and dry-run all report identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import TYPE_CHECKING
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.attention2d import Attn2DConfig, attn2d_config
+from repro.core.runtime import Runtime
+from repro.core.topology import (AXIS_DATA, AXIS_POD, BATCH_AXES, MESH_AXES,
+                                 MODEL_AXES, SEQ_AXES, ParallelConfig,
+                                 make_mesh, refine_mesh)
+from repro.core.zero import (_group_size, leaf_extent, tp_shardings,
+                             zero_shardings)
+
+if TYPE_CHECKING:                                  # avoid core -> models
+    from repro.models.model import ModelConfig     # import at runtime
+    from repro.train.optimizer import OptConfig
+
+#: per-parameter state bytes: fp32 master + Adam m + Adam v
+STATE_BYTES_PER_PARAM = 12
+#: transient bf16 compute copy of the (matrix) params
+HALF_BYTES_PER_PARAM = 2
+#: rough live activation width per token per layer, in units of
+#: d_model × 2 bytes: hidden + norms + q/k/v/o + gate/up intermediates
+#: when nothing is rematerialized; the saved-residual footprint per layer
+#: under full / SC++ checkpointing.
+ACT_UNITS = {"none": 14, "scpp": 2, "full": 1}
+#: fraction of the device budget the optimizer/param state may occupy —
+#: the rest is headroom for activations, grads and XLA workspace.
+STATE_BUDGET_FRAC = 0.6
+
+#: AMSP sharding modes, smallest extent first (Full-Replica → dp-only →
+#: sp-only → full dp×sp).  ``build_plan`` picks the first that fits.
+ZERO_MODES = (
+    ("replica", ()),
+    ("dp", (AXIS_DATA,)),
+    ("sp", MODEL_AXES),
+    ("dp_sp", (AXIS_DATA,) + MODEL_AXES),
+    ("pod_dp_sp", (AXIS_POD, AXIS_DATA) + MODEL_AXES),
+)
+
+
+@functools.lru_cache(maxsize=64)
+def _params_struct(cfg):
+    """Abstract param tree for a (hashable) ModelConfig — cached so the
+    memory model and describe()/leaf_extents() trace the model once."""
+    from repro.models.model import init_params
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def _param_count(cfg) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(_params_struct(cfg)))
+
+
+def _fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB"):
+        if abs(b) < 1024 or unit == "GB":
+            return f"{b:.1f}{unit}" if unit != "B" else f"{int(b)}B"
+        b /= 1024
+    return f"{b:.1f}GB"
+
+
+def choose_zero_mode(n_params: int, mesh: Mesh, budget_bytes: float,
+                     *, include_pod: bool = False):
+    """AMSP mode selection from the param+optimizer memory model.
+
+    Returns ``(mode_name, group, groups)`` where ``groups`` is the
+    preference order handed to ``leaf_spec``: the chosen group first,
+    then every smaller extent as a fallback for leaves the chosen group
+    cannot divide (after ``leaf_spec``'s own sub-group dropping).
+    """
+    state = n_params * (STATE_BYTES_PER_PARAM + HALF_BYTES_PER_PARAM)
+    modes = [(name, grp) for name, grp in ZERO_MODES
+             if include_pod or AXIS_POD not in grp]
+    sized = sorted(((name, grp, _group_size(mesh, grp)) for name, grp
+                    in modes), key=lambda t: t[2])
+    chosen = sized[-1]                 # largest extent if nothing fits
+    for name, grp, g in sized:
+        if state / max(g, 1) <= budget_bytes * STATE_BUDGET_FRAC:
+            chosen = (name, grp, g)
+            break
+    fallbacks = tuple(grp for _, grp, g in reversed(sized)
+                      if g < chosen[2] and grp)
+    groups = ((chosen[1],) if chosen[1] else ()) + fallbacks
+    return chosen[0], chosen[1], groups
+
+
+def choose_remat(cfg, budget_bytes: float, state_dev: float,
+                 tokens_dev: float) -> str:
+    """Pick ``none | full | scpp`` from the activation estimate: the
+    cheapest-recompute policy whose saved activations fit the headroom."""
+    headroom = budget_bytes - state_dev
+    for policy in ("none", "scpp", "full"):
+        saved = (tokens_dev * cfg.d_model * 2
+                 * ACT_UNITS[policy] * cfg.num_layers)
+        if policy != "none":           # + one layer recompute peak
+            saved += tokens_dev * cfg.d_model * 2 * ACT_UNITS["none"]
+        if saved <= headroom:
+            return policy
+    return "full"
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Every cross-layer execution decision, made once.
+
+    Consumers read decisions from here: ``plan.cfg`` (remat already
+    resolved), ``plan.rt`` (mesh + impl + batch axes), the sharding
+    factories, and ``plan.grad_accum``.
+    """
+    cfg: "ModelConfig"               # remat already resolved
+    pc: ParallelConfig
+    opt: "OptConfig"
+    mesh: Mesh
+    rt: Runtime
+    grad_accum: int = 1
+    zero_mode: str = "replica"
+    zero_groups: tuple = ()
+    memory_budget: float = 16e9      # bytes / device
+    #: workload shape the memory model used (None when not supplied)
+    seq_len: int | None = None
+    global_batch: int | None = None
+    mem: dict = dataclasses.field(default_factory=dict)
+
+    # -- sharding factories -------------------------------------------------
+
+    def param_shardings(self, params):
+        """Hybrid-ZeRO NamedShardings at the chosen extent."""
+        return zero_shardings(params, self.mesh, groups=self.zero_groups)
+
+    def opt_shardings(self, param_sh):
+        """Optimizer state inherits the param shardings (ZeRO-1/2)."""
+        return {"m": param_sh, "v": param_sh,
+                "step": NamedSharding(self.mesh, P())}
+
+    def serve_shardings(self, params):
+        """Weight-stationary (inference-TP) shardings for serving."""
+        return tp_shardings(params, self.mesh)
+
+    def batch_shardings(self, kind: str = "train"):
+        """NamedShardings for a step's batch dict.  Train batches carry a
+        leading (replicated) accumulation axis when ``grad_accum > 1``."""
+        mesh, rt = self.mesh, self.rt
+        lead = (None,) if kind == "train" and self.grad_accum > 1 else ()
+        if kind == "decode":
+            return {"tokens": NamedSharding(mesh, P(rt.batch_axes, None))}
+        tok = NamedSharding(mesh, P(*lead, rt.batch_axes, SEQ_AXES))
+        out = {"tokens": tok}
+        if kind == "train":
+            out["labels"] = out["positions"] = tok
+        if self.cfg.family == "encdec":
+            out["frames"] = NamedSharding(
+                mesh, P(*lead, rt.batch_axes, SEQ_AXES, None))
+        return out
+
+    def attn2d(self, *, causal: bool = True, zigzag: bool | None = None,
+               window: int | None = None, softcap: float = 0.0,
+               scale: float | None = None) -> Attn2DConfig:
+        """The 2D-Attention grid config implied by this plan."""
+        return attn2d_config(self.pc, impl=self.rt.impl, causal=causal,
+                             zigzag=self.cfg.zigzag if zigzag is None
+                             else zigzag, window=window, softcap=softcap,
+                             scale=scale)
+
+    def data_config(self, seq_len: int, global_batch: int,
+                    zigzag: bool | None = None, **kw):
+        """DataConfig consistent with this plan (cp, zigzag layout,
+        microbatch grid) — the loader-side §4.4 post-processing.
+        ``zigzag`` defaults to the plan's model-family decision."""
+        from repro.data.pipeline import DataConfig
+        cfg = self.cfg
+        if zigzag is None:
+            zigzag = cfg.zigzag and cfg.family in ("dense", "moe", "encdec")
+        return DataConfig(vocab=cfg.vocab, seq_len=seq_len,
+                          global_batch=global_batch, cp=self.pc.cp,
+                          zigzag=zigzag, grad_accum=self.grad_accum, **kw)
+
+    # -- reporting ----------------------------------------------------------
+
+    def leaf_extents(self) -> dict:
+        """{top-level param key: sorted unique (extent, axes)} — the ZeRO
+        degree actually applied per leaf class."""
+        struct = _params_struct(self.cfg)
+        out: dict[str, set] = {}
+        for path, leaf in jax.tree_util.tree_flatten_with_path(struct)[0]:
+            key = str(getattr(path[0], "key", path[0]))
+            ext = leaf_extent(leaf.shape, self.mesh, self.zero_groups) \
+                if self.zero_groups else (1, ())
+            out.setdefault(key, set()).add(ext)
+        return {k: sorted(v) for k, v in sorted(out.items())}
+
+    def describe(self) -> str:
+        """One table: mesh, placement, ZeRO extent per leaf class, remat,
+        accumulation, per-device memory estimate."""
+        cfg, pc, m = self.cfg, self.pc, self.mem
+        minor = "head" if pc.placement == "head_first" else "inner"
+        shape = "×".join(str(self.mesh.shape[a]) for a in MESH_AXES)
+        lines = [
+            f"ExecutionPlan: {cfg.name} [{cfg.family}] on "
+            f"{self.mesh.size} devices",
+            f"  mesh        {'×'.join(MESH_AXES)} = {shape}  "
+            f"placement={pc.placement} ({minor} minor)",
+            f"  parallel    dp={pc.dp} pods={pc.pods} hp={pc.hp} "
+            f"cp={pc.cp} (outer={pc.cp_outer} × inner={pc.cp_inner})  "
+            f"sp={pc.sp}",
+            f"  batch       global_batch={self.global_batch} "
+            f"seq_len={self.seq_len} grad_accum={self.grad_accum} "
+            f"microbatch={m.get('microbatch')}",
+            f"  attention   impl={self.rt.impl} zigzag={cfg.zigzag} "
+            f"hp={pc.hp}×cp={pc.cp} 2D grid",
+            f"  remat       {cfg.remat}",
+            f"  zero        mode={self.zero_mode} "
+            f"extent={m.get('zero_extent', 1)} "
+            f"axes={self.zero_groups[0] if self.zero_groups else ()}",
+        ]
+        ext = self.leaf_extents()
+        if ext:
+            per = " ".join(
+                f"{k}={'/'.join(str(e) for e, _ in v)}"
+                for k, v in ext.items())
+            lines.append(f"    leaf extents: {per}")
+        lines.append(
+            f"  memory/dev  params+opt={_fmt_bytes(m.get('state_dev', 0))} "
+            f"bf16-copy={_fmt_bytes(m.get('half_dev', 0))} "
+            f"acts≈{_fmt_bytes(m.get('act_dev', 0))} "
+            f"total≈{_fmt_bytes(m.get('total_dev', 0))} "
+            f"/ budget {_fmt_bytes(self.memory_budget)}")
+        return "\n".join(lines)
+
+
+def build_plan(cfg, pc: ParallelConfig | None = None, opt=None, *,
+               devices=None, base_mesh: Mesh | None = None,
+               impl: str | None = None, grad_accum: int = 1,
+               remat: str | None = None, zero: str = "auto",
+               memory_budget_gb: float = 16.0,
+               include_pod: bool = False,
+               seq_len: int | None = None,
+               global_batch: int | None = None) -> ExecutionPlan:
+    """Build the ExecutionPlan — the only place these decisions are made.
+
+    * ``devices`` / ``base_mesh`` — flat device list (tests, single-host)
+      or a production ``(pod, data, model)`` mesh to refine.
+    * ``impl`` — attention impl; ``None`` auto-selects by backend.
+    * ``remat`` — ``None`` keeps ``cfg.remat``; ``"auto"`` decides from
+      the activation memory model (needs ``seq_len``+``global_batch``);
+      an explicit policy overrides.
+    * ``zero`` — ``"auto"`` picks the AMSP mode from the memory model;
+      or force ``replica | dp | sp | dp_sp | pod_dp_sp``.
+    """
+    from repro.train.optimizer import OptConfig
+    pc = pc or ParallelConfig()
+    opt = opt or OptConfig()
+    pc.validate()
+    assert grad_accum >= 1
+    if global_batch is not None:
+        assert global_batch % grad_accum == 0, (global_batch, grad_accum)
+
+    mesh = refine_mesh(base_mesh, pc) if base_mesh is not None \
+        else make_mesh(pc, devices=devices)
+    if impl is None:
+        impl = "auto" if jax.default_backend() == "tpu" else "ref"
+
+    budget = memory_budget_gb * 1e9
+    n_params = _param_count(cfg)
+
+    # hybrid-ZeRO extent from the param+optimizer memory model
+    if zero == "auto":
+        zero_mode, group, groups = choose_zero_mode(
+            n_params, mesh, budget, include_pod=include_pod)
+    else:
+        by_name = dict(ZERO_MODES)
+        assert zero in by_name, (zero, sorted(by_name))
+        zero_mode, group = zero, by_name[zero]
+        smaller = tuple(g for _, g in ZERO_MODES
+                        if g and _group_size(mesh, g) <
+                        max(_group_size(mesh, group), 1))
+        groups = ((group,) if group else ()) + tuple(reversed(smaller))
+    extent = max(_group_size(mesh, group), 1)
+    state_dev = n_params * STATE_BYTES_PER_PARAM / extent
+    half_dev = n_params * HALF_BYTES_PER_PARAM / extent
+
+    # batch shardability + per-device tokens for the activation model
+    n_batch_dev = pc.pods * pc.dp
+    batch_shardable = True
+    microbatch = tokens_dev = None
+    if global_batch is not None:
+        microbatch = global_batch // grad_accum
+        batch_shardable = microbatch % n_batch_dev == 0
+        if seq_len is not None:
+            div = (n_batch_dev if batch_shardable else 1) * pc.sp
+            tokens_dev = microbatch * seq_len / div
+
+    # remat policy
+    if remat == "auto":
+        policy = choose_remat(cfg, budget, state_dev + half_dev,
+                              tokens_dev) if tokens_dev is not None \
+            else cfg.remat
+    else:
+        policy = remat or cfg.remat
+    if policy != cfg.remat:
+        cfg = dataclasses.replace(cfg, remat=policy)
+
+    act_dev = (tokens_dev or 0) * cfg.d_model * 2 \
+        * ACT_UNITS[cfg.remat] * cfg.num_layers
+    rt = Runtime(mesh=mesh, pc=pc, impl=impl,
+                 batch_axes=BATCH_AXES if batch_shardable else ())
+    mem = {"n_params": n_params, "state_dev": state_dev,
+           "half_dev": half_dev, "act_dev": act_dev,
+           "total_dev": state_dev + half_dev + act_dev,
+           "zero_extent": extent, "microbatch": microbatch,
+           "batch_shardable": batch_shardable}
+    return ExecutionPlan(cfg=cfg, pc=pc, opt=opt, mesh=mesh, rt=rt,
+                         grad_accum=grad_accum, zero_mode=zero_mode,
+                         zero_groups=groups, memory_budget=budget,
+                         seq_len=seq_len, global_batch=global_batch,
+                         mem=mem)

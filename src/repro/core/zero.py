@@ -36,34 +36,66 @@ def _group_size(mesh: Mesh, group) -> int:
     return int(np.prod([mesh.shape[a] for a in group]))
 
 
+def _spec_for_group(shape, mesh: Mesh, group) -> P | None:
+    g = _group_size(mesh, group)
+    if g <= 1:
+        return None
+    # largest dim divisible by the group size wins
+    cands = [(d, s) for d, s in enumerate(shape) if s % g == 0 and s >= g]
+    if not cands:
+        return None
+    dim = max(cands, key=lambda t: t[1])[0]
+    spec = [None] * len(shape)
+    spec[dim] = group
+    return P(*spec)
+
+
 def leaf_spec(shape, mesh: Mesh, groups=_DEFAULT_GROUPS,
               min_elems: int = 2 ** 12) -> P:
-    """Pick a PartitionSpec for one param leaf."""
+    """Pick a PartitionSpec for one param leaf.
+
+    For each candidate group, if no tensor dim divides the full group
+    size, fall back to the *largest divisible sub-group* before moving
+    on: axes are dropped from the minor end (``inner`` first), so an
+    awkward leaf still shards e.g. ``(data, head, outer)``-wide instead
+    of silently replicating.
+    """
     if np.prod(shape, dtype=np.int64) < min_elems:
         return P()
     for group in groups:
-        g = _group_size(mesh, group)
-        if g <= 1:
-            continue
-        # largest dim divisible by the group size wins
-        cands = [(d, s) for d, s in enumerate(shape) if s % g == 0 and s >= g]
-        if not cands:
-            continue
-        dim = max(cands, key=lambda t: t[1])[0]
-        spec = [None] * len(shape)
-        spec[dim] = group
-        return P(*spec)
+        for end in range(len(group), 0, -1):
+            spec = _spec_for_group(shape, mesh, group[:end])
+            if spec is not None:
+                return spec
     return P()
 
 
+def leaf_extent(shape, mesh: Mesh, groups=_DEFAULT_GROUPS,
+                min_elems: int = 2 ** 12) -> tuple[int, tuple]:
+    """(sharding extent, axes) ``leaf_spec`` chose for this leaf — the
+    per-leaf ZeRO degree surfaced by ``ExecutionPlan.describe()``."""
+    spec = leaf_spec(shape, mesh, groups, min_elems)
+    for entry in spec:
+        if entry is not None:
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            return _group_size(mesh, axes), tuple(axes)
+    return 1, ()
+
+
 def zero_shardings(params, mesh: Mesh, *, include_pod: bool = False,
-                   zero_axes=None):
-    """NamedSharding pytree for params (and, reused, optimizer moments)."""
-    groups = _DEFAULT_GROUPS
-    if zero_axes is not None:
-        groups = (tuple(zero_axes),) + _DEFAULT_GROUPS
-    if include_pod:
-        groups = ((AXIS_POD,) + _DEFAULT_GROUPS[0],) + groups
+                   zero_axes=None, groups=None):
+    """NamedSharding pytree for params (and, reused, optimizer moments).
+
+    ``groups`` (preference-ordered) is normally supplied by
+    ``core/plan.py``, which picks the extent from a memory model; the
+    default is the legacy most-sharded-first order.
+    """
+    if groups is None:
+        groups = _DEFAULT_GROUPS
+        if zero_axes is not None:
+            groups = (tuple(zero_axes),) + _DEFAULT_GROUPS
+        if include_pod:
+            groups = ((AXIS_POD,) + _DEFAULT_GROUPS[0],) + groups
     return jax.tree.map(
         lambda x: NamedSharding(mesh, leaf_spec(x.shape, mesh, groups)),
         params)

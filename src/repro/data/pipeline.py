@@ -24,17 +24,26 @@ from repro.models.model import ModelConfig
 class DataConfig:
     vocab: int
     seq_len: int
-    global_batch: int          # in sequences
+    global_batch: int          # in sequences, across all microbatches
     cp: int = 1                # context size for zigzag layout
     zigzag: bool = True
+    grad_accum: int = 1        # microbatches per step; batches come out
+                               # shaped (accum, global_batch//accum, ...)
     seed: int = 0
     pad_frac: float = 0.0      # fraction of tail tokens padded (-1 labels)
 
 
 class SyntheticLM:
-    """Synthetic next-token corpus: a fixed random Markov-ish stream."""
+    """Synthetic next-token corpus: a fixed random Markov-ish stream.
+
+    With ``grad_accum > 1`` every batch leaf carries a leading
+    accumulation axis — ``(accum, microbatch, ...)`` — matching the
+    ``lax.scan`` microbatch loop in ``train/train_step.py``.
+    """
 
     def __init__(self, cfg: DataConfig, model_cfg: ModelConfig | None = None):
+        assert cfg.global_batch % cfg.grad_accum == 0, \
+            (cfg.global_batch, cfg.grad_accum)
         self.cfg = cfg
         self.model_cfg = model_cfg
         s, cp = cfg.seq_len, cfg.cp
@@ -44,8 +53,13 @@ class SyntheticLM:
             self._perm = np.arange(s)
 
     def _layout(self, arr):
-        """Apply the zigzag data-loader permutation along the seq axis."""
-        return arr[:, self._perm]
+        """Zigzag data-loader permutation (seq axis), then the microbatch
+        split: (B, S, ...) -> (accum, B // accum, S, ...)."""
+        arr = arr[:, self._perm]
+        a = self.cfg.grad_accum
+        if a > 1:
+            arr = arr.reshape((a, arr.shape[0] // a) + arr.shape[1:])
+        return arr
 
     def batch(self, step: int) -> dict:
         cfg = self.cfg
@@ -74,7 +88,11 @@ class SyntheticLM:
                "labels": self._layout(labels),
                "positions": self._layout(positions)}
         if self.model_cfg is not None and self.model_cfg.family == "encdec":
-            out["frames"] = rng.standard_normal(
+            frames = rng.standard_normal(
                 (b, self.model_cfg.enc_frames, self.model_cfg.d_model)
             ).astype(np.float32)
+            a = cfg.grad_accum
+            if a > 1:     # microbatch split only; no seq perm on frames
+                frames = frames.reshape((a, b // a) + frames.shape[1:])
+            out["frames"] = frames
         return out

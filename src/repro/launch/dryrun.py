@@ -32,52 +32,41 @@ from repro.analysis.roofline import (count_params,          # noqa: E402
                                      model_flops)
 from repro.configs import get_config, get_parallel, all_arch_names  # noqa
 from repro.configs.common import SHAPES, applicable_shapes  # noqa: E402
-from repro.core.topology import (BATCH_AXES, SEQ_AXES,      # noqa: E402
-                                 ParallelConfig)
-from repro.core.zero import tp_shardings, zero_shardings    # noqa: E402
-from repro.launch.mesh import production_runtime            # noqa: E402
+from repro.core.plan import ExecutionPlan                   # noqa: E402
+from repro.core.topology import ParallelConfig              # noqa: E402
+from repro.launch.mesh import production_plan               # noqa: E402
 from repro.models.decode import (cache_shardings,           # noqa: E402
                                  decode_step, init_caches, prefill)
 from repro.models.model import init_params, ModelConfig     # noqa: E402
-from repro.train.optimizer import OptConfig, init_opt_state  # noqa: E402
+from repro.train.optimizer import init_opt_state            # noqa: E402
 from repro.train.train_step import make_train_step          # noqa: E402
 
 
-def input_specs(cfg: ModelConfig, shape_name: str, rt):
-    """ShapeDtypeStruct stand-ins + NamedShardings for every step input.
+def input_specs(plan: ExecutionPlan, shape_name: str):
+    """ShapeDtypeStruct stand-ins + the plan's NamedShardings for every
+    step input.
 
     Weak-type-correct, shardable, no device allocation (the shannon/kernels
     pattern).  Returns (structs, shardings) dictionaries keyed like the
     step function's batch argument.
     """
-    shape = SHAPES[shape_name]
+    cfg, shape = plan.cfg, SHAPES[shape_name]
     b, s = shape.global_batch, shape.seq_len
-    mesh = rt.mesh
     i32 = jnp.int32
-    tok_spec = P(rt.batch_axes, SEQ_AXES)
-    structs, shards = {}, {}
+    shards = plan.batch_shardings(shape.kind)
+    structs = {}
 
     if shape.kind == "train":
         for k in ("tokens", "labels", "positions"):
             structs[k] = jax.ShapeDtypeStruct((b, s), i32)
-            shards[k] = NamedSharding(mesh, tok_spec)
-        if cfg.family == "encdec":
-            structs["frames"] = jax.ShapeDtypeStruct(
-                (b, cfg.enc_frames, cfg.d_model), cfg.compute_dtype)
-            shards["frames"] = NamedSharding(
-                mesh, P(rt.batch_axes, SEQ_AXES, None))
     elif shape.kind == "prefill":
         structs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
-        shards["tokens"] = NamedSharding(mesh, tok_spec)
-        if cfg.family == "encdec":
-            structs["frames"] = jax.ShapeDtypeStruct(
-                (b, cfg.enc_frames, cfg.d_model), cfg.compute_dtype)
-            shards["frames"] = NamedSharding(
-                mesh, P(rt.batch_axes, SEQ_AXES, None))
     else:  # decode
         structs["tokens"] = jax.ShapeDtypeStruct((b, 1), i32)
-        shards["tokens"] = NamedSharding(mesh, P(rt.batch_axes, None))
-    return structs, shards
+    if shape.kind != "decode" and cfg.family == "encdec":
+        structs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_frames, cfg.d_model), cfg.compute_dtype)
+    return structs, {k: shards[k] for k in structs}
 
 
 def _mem_summary(compiled):
@@ -123,21 +112,20 @@ def _with_groups(cfg: ModelConfig, groups: int) -> ModelConfig:
     return dataclasses.replace(cfg, **kw)
 
 
-def _compile_cell(cfg, shape, rt, *, donate=True, param_sharding="zero"):
+def _compile_cell(plan, shape, *, donate=True, param_sharding="zero"):
     """lower+compile one variant; returns (compiled, t_lower, t_compile)."""
-    mesh = rt.mesh
-    structs, shards = input_specs(cfg, shape.name, rt)
+    cfg, rt, mesh = plan.cfg, plan.rt, plan.mesh
+    structs, shards = input_specs(plan, shape.name)
     key = jax.random.PRNGKey(0)
     p_struct = jax.eval_shape(lambda: init_params(cfg, key))
-    p_sh = tp_shardings(p_struct, mesh) if param_sharding == "tp" \
-        else zero_shardings(p_struct, mesh)
+    p_sh = plan.serve_shardings(p_struct) if param_sharding == "tp" \
+        else plan.param_shardings(p_struct)
     t0 = time.time()
     with mesh:
         if shape.kind == "train":
             o_struct = jax.eval_shape(init_opt_state, p_struct)
-            o_sh = {"m": p_sh, "v": p_sh,
-                    "step": NamedSharding(mesh, P())}
-            fn = make_train_step(cfg, rt, OptConfig())
+            o_sh = plan.opt_shardings(p_sh)
+            fn = make_train_step(plan)
             jitted = jax.jit(fn, in_shardings=(p_sh, o_sh, shards),
                              out_shardings=(p_sh, o_sh, None),
                              donate_argnums=(0, 1) if donate else ())
@@ -182,7 +170,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              pc: ParallelConfig | None = None, impl: str = "ref",
              remat: str | None = None, out_dir: str | None = None,
              hlo_out: str | None = None, tag_extra: str = "",
-             param_sharding: str = "zero") -> dict:
+             param_sharding: str = "zero",
+             plan_only: bool = False) -> dict:
     """One dry-run cell.
 
     The full-size model compiles with scanned layers (the scale/memory
@@ -192,22 +181,24 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     stacks (zamba2's 3 tail layers ≈ +0.5 group, <1% error).
     """
     import dataclasses
-    cfg = get_config(arch)
-    if remat is not None:
-        cfg = dataclasses.replace(cfg, remat=remat)
     shape = SHAPES[shape_name]
     if pc is None:
         pc = get_parallel(arch, shape_name, multi_pod)
-    n_batch_devices = pc.pods * pc.dp
-    batch_shardable = shape.global_batch % n_batch_devices == 0
-    rt = production_runtime(pc, multi_pod=multi_pod, impl=impl,
-                            batch_shardable=batch_shardable)
-    mesh = rt.mesh
+    plan = production_plan(get_config(arch), pc, multi_pod=multi_pod,
+                           impl=impl, remat=remat,
+                           seq_len=shape.seq_len,
+                           global_batch=shape.global_batch)
+    cfg, mesh = plan.cfg, plan.mesh
     chips = mesh.size
+    if plan_only:
+        desc = plan.describe()
+        print(desc)
+        return {"arch": arch, "shape": shape_name, "plan_only": True,
+                "describe": desc}
 
     # 1) full-size scanned compile — the dry-run pass/fail + memory truth
     compiled, t_lower, t_compile = _compile_cell(
-        cfg, shape, rt, param_sharding=param_sharding)
+        plan, shape, param_sharding=param_sharding)
     mem = _mem_summary(compiled)
     hlo = compiled.as_text()
     if hlo_out:
@@ -221,7 +212,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     for g in (1, 2):
         cfg_g = dataclasses.replace(_with_groups(cfg, g),
                                     unroll_loops=True)
-        comp_g, _, _ = _compile_cell(cfg_g, shape, rt, donate=False,
+        comp_g, _, _ = _compile_cell(dataclasses.replace(plan, cfg=cfg_g),
+                                     shape, donate=False,
                                      param_sharding=param_sharding)
         cost[g] = _cost_summary(comp_g)
         coll[g] = parse_collective_bytes(comp_g.as_text())
@@ -288,6 +280,9 @@ def main():
     ap.add_argument("--tag", default="")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--hlo-out", default=None)
+    ap.add_argument("--plan", action="store_true",
+                    help="print ExecutionPlan.describe() per cell and "
+                         "skip the compiles (fast plan regression smoke)")
     args = ap.parse_args()
 
     archs = all_arch_names() if args.arch == "all" else [args.arch]
@@ -311,7 +306,9 @@ def main():
                                impl=args.impl, remat=args.remat,
                                out_dir=args.out, hlo_out=args.hlo_out,
                                param_sharding=args.param_sharding,
-                               tag_extra=args.tag)
+                               tag_extra=args.tag, plan_only=args.plan)
+                if args.plan:
+                    continue
                 c = rec["cost"]
                 print(f"[dryrun] {arch} {shape} {rec['mesh']} {rec['pc']}: "
                       f"flops/dev={c['flops']:.3e} "

@@ -4,17 +4,17 @@
 a 2×16×16 two-pod slice (512 chips).  It is a *function* so importing this
 module never touches jax device state.
 
-``production_runtime`` refines the production mesh into the 5-axis
-LoongTrain mesh (pod, data, head, outer, inner) for a given ParallelConfig
-without changing device order — placement (head-first vs context-first)
-decides which sub-axis is ICI-minor (see core/topology.py).
+``production_plan`` refines the production mesh into the 5-axis LoongTrain
+mesh via ``core/plan.build_plan`` — placement (head-first vs context-first)
+decides which sub-axis is ICI-minor (see core/topology.py), and the plan
+owns every downstream decision (ZeRO extent, remat, shardings).
 """
 from __future__ import annotations
 
 import jax
 
-from repro.core.runtime import Runtime
-from repro.core.topology import BATCH_AXES, ParallelConfig, refine_mesh
+from repro.core.plan import ExecutionPlan, build_plan
+from repro.core.topology import ParallelConfig
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -23,10 +23,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def production_runtime(pc: ParallelConfig, *, multi_pod: bool = False,
-                       impl: str = "auto",
-                       batch_shardable: bool = True) -> Runtime:
+def production_plan(cfg, pc: ParallelConfig, *, multi_pod: bool = False,
+                    impl: str = "auto", **kw) -> ExecutionPlan:
     base = make_production_mesh(multi_pod=multi_pod)
-    mesh = refine_mesh(base, pc)
-    return Runtime(mesh=mesh, pc=pc, impl=impl,
-                   batch_axes=BATCH_AXES if batch_shardable else ())
+    return build_plan(cfg, pc, base_mesh=base, impl=impl, **kw)

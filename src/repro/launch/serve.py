@@ -12,8 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, get_parallel, get_reduced
-from repro.core.runtime import Runtime
-from repro.core.topology import ParallelConfig, make_mesh
+from repro.core.plan import build_plan
+from repro.core.topology import ParallelConfig
 from repro.models.decode import decode_step, grow_caches, prefill
 from repro.models.model import init_params
 
@@ -47,13 +47,14 @@ def main():
     if args.smoke:
         cfg = get_reduced(args.arch)
         pc = ParallelConfig()
-        mesh = make_mesh(pc, devices=jax.devices()[:1])
+        devices = jax.devices()[:1]
     else:
         cfg = get_config(args.arch)
         pc = get_parallel(args.arch, "decode_32k", False)
-        mesh = make_mesh(pc)
-    rt = Runtime(mesh=mesh, pc=pc,
-                 impl="auto" if jax.default_backend() == "tpu" else "ref")
+        devices = None
+    plan = build_plan(cfg, pc, devices=devices)
+    print(plan.describe())
+    mesh, rt = plan.mesh, plan.rt
 
     params = init_params(cfg, jax.random.PRNGKey(0))
     tokens = jax.random.randint(jax.random.PRNGKey(1),

@@ -3,12 +3,13 @@
 Single-host (CPU/GPU dev) and multi-host SPMD: on a real fleet every host
 runs this same script; ``jax.distributed.initialize()`` picks up the
 standard cluster env (COORDINATOR_ADDRESS / NUM_PROCESSES / PROCESS_ID or
-TPU metadata).  The mesh is the production (data, model) grid refined into
-the LoongTrain axes.
+TPU metadata).  All execution decisions — mesh, placement, hybrid ZeRO,
+remat, microbatching — are made once by ``build_plan`` and printed via
+``plan.describe()``.
 
     python -m repro.launch.train --arch qwen3-1.7b --steps 100 \
         --seq-len 4096 --global-batch 256 --hp 8 --inner 2 \
-        --ckpt-dir /tmp/ckpt [--smoke]
+        --grad-accum 4 --ckpt-dir /tmp/ckpt [--smoke]
 
 ``--smoke`` swaps in the reduced config + a 1-device mesh — the same code
 path end to end, laptop-sized.
@@ -17,14 +18,12 @@ from __future__ import annotations
 
 import argparse
 import logging
-import os
 
 import jax
 
 from repro.configs import get_config, get_parallel, get_reduced
-from repro.core.runtime import Runtime
-from repro.core.topology import ParallelConfig, make_mesh, refine_mesh
-from repro.data.pipeline import DataConfig
+from repro.core.plan import build_plan
+from repro.core.topology import ParallelConfig
 from repro.train.optimizer import OptConfig
 from repro.train.trainer import Trainer, TrainerConfig
 
@@ -35,10 +34,13 @@ def main():
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--seq-len", type=int, default=4096)
     ap.add_argument("--global-batch", type=int, default=256)
+    ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--hp", type=int, default=None)
     ap.add_argument("--inner", type=int, default=None)
     ap.add_argument("--placement", default=None)
+    ap.add_argument("--remat", default=None,
+                    help="none|full|scpp|auto (default: model config)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--smoke", action="store_true",
@@ -54,7 +56,7 @@ def main():
     if args.smoke:
         cfg = get_reduced(args.arch)
         pc = ParallelConfig()
-        mesh = make_mesh(pc, devices=jax.devices()[:1])
+        devices = jax.devices()[:1]
         seq, gb = min(args.seq_len, 128), min(args.global_batch, 8)
     else:
         cfg = get_config(args.arch)
@@ -68,17 +70,16 @@ def main():
         n = pc.num_devices
         assert len(jax.devices()) >= n, \
             f"need {n} devices, have {len(jax.devices())}"
-        mesh = make_mesh(pc)
+        devices = None
         seq, gb = args.seq_len, args.global_batch
 
-    rt = Runtime(mesh=mesh, pc=pc,
-                 impl="auto" if jax.default_backend() == "tpu" else "ref")
-    zigzag = cfg.zigzag and cfg.family in ("dense", "moe", "encdec")
+    plan = build_plan(cfg, pc, OptConfig(lr=args.lr,
+                                         total_steps=args.steps),
+                      devices=devices, grad_accum=args.grad_accum,
+                      remat=args.remat, seq_len=seq, global_batch=gb)
+    print(plan.describe())
     trainer = Trainer(
-        cfg, rt,
-        OptConfig(lr=args.lr, total_steps=args.steps),
-        DataConfig(vocab=cfg.vocab, seq_len=seq, global_batch=gb,
-                   cp=pc.cp, zigzag=zigzag),
+        plan, plan.data_config(seq, gb),
         TrainerConfig(num_steps=args.steps, ckpt_dir=args.ckpt_dir,
                       ckpt_every=args.ckpt_every))
     losses = trainer.run()

@@ -15,7 +15,8 @@ from jax.ad_checkpoint import checkpoint_name
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.attention2d import Attn2DConfig, attention_2d
+from repro.core.attention2d import (Attn2DConfig, attention_2d,
+                                    attn2d_config)
 from repro.core.runtime import shard_map_compat as _shard_map
 from repro.core.runtime import Runtime
 from repro.core.topology import (AXIS_HP, AXIS_INNER, AXIS_OUTER, BATCH_AXES,
@@ -38,11 +39,9 @@ class AttnKind:
 
 def make_2d_cfg(rt: Runtime, kind: AttnKind, *, zigzag: bool,
                 scale: float | None = None) -> Attn2DConfig:
-    pc = rt.pc
-    return Attn2DConfig(hp=pc.hp, n_out=pc.cp_outer, w=pc.cp_inner,
-                        causal=kind.causal, zigzag=zigzag,
-                        window=kind.window, softcap=kind.softcap,
-                        scale=scale, impl=rt.impl)
+    return attn2d_config(rt.pc, impl=rt.impl, causal=kind.causal,
+                         zigzag=zigzag, window=kind.window,
+                         softcap=kind.softcap, scale=scale)
 
 
 # ---------------------------------------------------------------------------

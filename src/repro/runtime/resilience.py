@@ -52,6 +52,22 @@ class StepMonitor:
         self.record(self._step, dt)
         return dt
 
+    def lap(self, n: int = 1):
+        """Record ``n`` steps at their amortized wall time since the last
+        ``start``/``lap``.  A sync-free async-dispatch loop can only
+        observe real step time at its sync boundaries, so it calls this
+        after each sync with the number of steps dispatched since the
+        previous one; straggler flagging then works at sync-window
+        granularity."""
+        assert self._t0 is not None
+        now = time.perf_counter()
+        dt = (now - self._t0) / max(n, 1)
+        self._t0 = now
+        for _ in range(n):
+            self._step += 1
+            self.record(self._step, dt)
+        return dt
+
     def record(self, step: int, dt: float):
         hist = self.times[-self.window:]
         if len(hist) >= 8:

@@ -1,9 +1,13 @@
 """AdamW with warmup+cosine schedule, global-norm clipping, ZeRO-sharded
 moments, and optional int8 error-feedback gradient compression.
 
-The optimizer state inherits the hybrid-ZeRO shardings of the params
-(core/zero.py), so the update is fully sharded: XLA reduce-scatters grads
-into the shard and all-gathers updated params at next use.
+This module is pure math over pytrees; *where* the state lives is the
+ExecutionPlan's decision: ``plan.opt_shardings`` makes the moments
+inherit the params' hybrid-ZeRO shardings (at the AMSP extent the plan
+chose), so the update is fully sharded — XLA reduce-scatters grads into
+the shard and all-gathers updated params at next use.  Under gradient
+accumulation the update runs once per step, on the microbatch-mean
+grads (train/train_step.py).
 """
 from __future__ import annotations
 

@@ -1,19 +1,25 @@
 """End-to-end trainer: data -> jitted step -> metrics, with checkpointing,
-preemption flush, deterministic resume, and straggler monitoring."""
+preemption flush, deterministic resume, and straggler monitoring.
+
+The trainer consumes an ``ExecutionPlan`` — it makes no mesh/sharding/
+remat decisions of its own.  The hot loop is *sync-free*: metrics stay on
+device and are only materialized (forcing a host sync) at ``log_every``
+boundaries, so step dispatch pipelines ahead of execution instead of
+blocking on ``float(loss)`` every iteration.
+"""
 from __future__ import annotations
 
 import dataclasses
 import logging
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.runtime import Runtime
+from repro.core.plan import ExecutionPlan
 from repro.data.pipeline import DataConfig, SyntheticLM
-from repro.models.model import ModelConfig, init_params
+from repro.models.model import init_params
 from repro.runtime import checkpoint as ckpt
 from repro.runtime.resilience import PreemptionGuard, StepMonitor
-from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.optimizer import init_opt_state
 from repro.train.train_step import jit_train_step
 
 log = logging.getLogger("repro.trainer")
@@ -29,18 +35,22 @@ class TrainerConfig:
 
 
 class Trainer:
-    def __init__(self, cfg: ModelConfig, rt: Runtime, opt_cfg: OptConfig,
-                 data_cfg: DataConfig, tcfg: TrainerConfig):
-        self.cfg, self.rt, self.tcfg = cfg, rt, tcfg
-        self.data = SyntheticLM(data_cfg, cfg)
+    def __init__(self, plan: ExecutionPlan, data_cfg: DataConfig,
+                 tcfg: TrainerConfig):
+        self.plan, self.tcfg = plan, tcfg
+        self.cfg, self.rt = plan.cfg, plan.rt
+        if data_cfg.grad_accum != plan.grad_accum:
+            data_cfg = dataclasses.replace(data_cfg,
+                                           grad_accum=plan.grad_accum)
+        self.data = SyntheticLM(data_cfg, plan.cfg)
         self.monitor = StepMonitor()
         self.guard = PreemptionGuard()
         self.guard.install()
 
-        with rt.mesh:
-            params = init_params(cfg, jax.random.PRNGKey(tcfg.seed))
-            self.step_fn, self.p_sh, self.o_sh = jit_train_step(
-                cfg, rt, opt_cfg, params)
+        with plan.mesh:
+            params = init_params(plan.cfg, jax.random.PRNGKey(tcfg.seed))
+            self.step_fn, self.p_sh, self.o_sh = jit_train_step(plan,
+                                                                params)
             self.params = jax.device_put(params, self.p_sh)
             self.opt_state = jax.device_put(init_opt_state(params),
                                             self.o_sh)
@@ -68,26 +78,34 @@ class Trainer:
                                 "opt": self.opt_state}, step)
 
     def run(self):
-        losses = []
-        with self.rt.mesh:
+        losses = []                    # device scalars until the end
+        pending = 0                    # steps dispatched since last sync
+        with self.plan.mesh:
+            self.monitor.start()
             for step in range(self.start_step, self.tcfg.num_steps):
                 batch = self.data.batch(step)
-                self.monitor.start()
                 self.params, self.opt_state, metrics = self.step_fn(
                     self.params, self.opt_state, batch)
-                loss = float(metrics["loss"])
-                self.monitor.stop()
-                losses.append(loss)
+                pending += 1
                 if step % self.tcfg.log_every == 0:
+                    # the only in-loop host sync; step time is amortized
+                    # over the steps dispatched since the previous sync
+                    loss = float(metrics["loss"])
+                    self.monitor.lap(pending)
+                    pending = 0
                     log.info("step %d loss %.4f gnorm %.3f (%.2fs/step)",
                              step, loss, float(metrics["grad_norm"]),
                              self.monitor.median)
+                losses.append(metrics["loss"])
                 if self.ckpter and (step + 1) % self.tcfg.ckpt_every == 0:
                     self.save(step + 1)
                 if self.guard.requested:
                     log.warning("preemption requested: flushing checkpoint")
                     self.save(step + 1)
                     break
+            losses = [float(x) for x in jax.device_get(losses)]
+            if pending:                # attribute the synced tail
+                self.monitor.lap(pending)
         if self.ckpter:
             self.ckpter.wait()
         return losses

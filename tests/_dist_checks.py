@@ -326,6 +326,102 @@ def check_decode_consistency():
     print("PASS decode_consistency")
 
 
+def check_plan_placement():
+    """ExecutionPlan round-trips head_first AND context_first through
+    attention_2d with identical numerics (vs the single-device oracle):
+    placement only permutes device placement, never the math."""
+    from repro.configs import get_reduced
+    from repro.core.plan import build_plan
+    from repro.core.topology import ParallelConfig
+    from repro.core.zigzag import to_zigzag, from_zigzag
+    from repro.core.attention2d import attention_2d
+    from repro.kernels.ref import attention_ref
+
+    rng = np.random.default_rng(7)
+    B, S, H, HKV, D = 1, 64, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, HKV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, HKV, D)), jnp.float32)
+    o_ref, _ = attention_ref(q, k, v, causal=True)
+
+    outs = {}
+    for placement in ("head_first", "context_first"):
+        pc = ParallelConfig(hp=2, cp_outer=2, cp_inner=2,
+                            placement=placement)
+        plan = build_plan(get_reduced("qwen3-1.7b"), pc, impl="ref")
+        cfg2d = plan.attn2d(causal=True, zigzag=True)
+        assert (cfg2d.hp, cfg2d.n_out, cfg2d.w) == (2, 2, 2)
+        qz, kz, vz = (to_zigzag(x, pc.cp) for x in (q, k, v))
+        with plan.mesh:
+            out = attention_2d(qz, kz, vz, mesh=plan.mesh, cfg=cfg2d)
+        outs[placement] = np.asarray(from_zigzag(out, pc.cp))
+        assert err(outs[placement], o_ref) < 5e-6, placement
+    assert err(outs["head_first"], outs["context_first"]) == 0.0
+    print("PASS plan_placement")
+
+
+def check_accum_collectives():
+    """Gradient accumulation on a dp=2 mesh: (a) the partitioned HLO's
+    collective instruction count does not scale with grad_accum (the
+    grad reduction/update point is outside the microbatch loop — no
+    per-microbatch resharding or optimizer application), and (b) the
+    sharded accum=2 step matches the single-device flat step."""
+    import re
+    from repro.configs import get_reduced
+    from repro.core.plan import build_plan
+    from repro.core.topology import ParallelConfig
+    from repro.data.pipeline import SyntheticLM
+    from repro.models.model import init_params
+    from repro.train.optimizer import init_opt_state
+    from repro.train.train_step import jit_train_step, make_train_step
+
+    cfg = get_reduced("qwen3-1.7b")
+
+    def compile_counts(accum):
+        plan = build_plan(cfg, ParallelConfig(dp=2), grad_accum=accum,
+                          seq_len=64, global_batch=8, zero="dp",
+                          impl="ref")
+        p = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+        o = jax.eval_shape(init_opt_state, p)
+        p_sh = plan.param_shardings(p)
+        shp = (accum, 8 // accum, 64) if accum > 1 else (8, 64)
+        batch = {kk: jax.ShapeDtypeStruct(shp, jnp.int32)
+                 for kk in ("tokens", "labels", "positions")}
+        with plan.mesh:
+            fn = jax.jit(make_train_step(plan),
+                         in_shardings=(p_sh, plan.opt_shardings(p_sh),
+                                       plan.batch_shardings("train")),
+                         out_shardings=(p_sh, plan.opt_shardings(p_sh),
+                                        None))
+            hlo = fn.lower(p, o, batch).compile().as_text()
+        return {op: len(re.findall(op + r"[-.\d]*\(", hlo))
+                for op in ("all-reduce", "reduce-scatter")}
+
+    c1, c4 = compile_counts(1), compile_counts(4)
+    assert c1 == c4, (c1, c4)
+
+    # numerics: dp=2 × accum=2 == single-device flat batch
+    results = {}
+    for tag, pc, accum in (("dist", ParallelConfig(dp=2), 2),
+                           ("single", ParallelConfig(), 1)):
+        devs = None if pc.dp > 1 else jax.devices()[:1]
+        plan = build_plan(cfg, pc, devices=devs, grad_accum=accum,
+                          seq_len=64, global_batch=8, impl="ref")
+        data = SyntheticLM(plan.data_config(64, 8), cfg)
+        batch = {kk: jnp.asarray(vv) for kk, vv in data.batch(0).items()}
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        opt = init_opt_state(params)
+        with plan.mesh:
+            step, _, _ = jit_train_step(plan, params, donate=False)
+            p2, _, m = step(params, opt, batch)
+        results[tag] = (jax.device_get(p2), float(m["loss"]))
+    assert abs(results["dist"][1] - results["single"][1]) < 1e-5
+    for a, b in zip(jax.tree.leaves(results["dist"][0]),
+                    jax.tree.leaves(results["single"][0])):
+        assert err(a, b) < 1e-5
+    print("PASS accum_collectives")
+
+
 def check_grad_compression():
     """int8 error-feedback psum inside shard_map over the data axis."""
     from jax.sharding import PartitionSpec as P

@@ -7,7 +7,8 @@ import sys
 import pytest
 
 _CHECKS = ["attention_grid", "attention_modes", "ring_pallas_path", "ssm",
-           "moe", "e2e_loss", "decode_consistency", "grad_compression"]
+           "moe", "e2e_loss", "decode_consistency", "grad_compression",
+           "plan_placement", "accum_collectives"]
 
 
 @pytest.mark.parametrize("check", _CHECKS)

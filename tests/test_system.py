@@ -7,21 +7,18 @@ import jax
 import pytest
 
 from repro.configs import get_reduced
-from repro.core.runtime import Runtime
-from repro.core.topology import ParallelConfig, make_mesh
-from repro.data.pipeline import DataConfig
+from repro.core.plan import build_plan
+from repro.core.topology import ParallelConfig
 from repro.train.optimizer import OptConfig
 from repro.train.trainer import Trainer, TrainerConfig
 
 
-def _mk(cfg, d, steps, ckpt_every=10):
-    pc = ParallelConfig()
-    mesh = make_mesh(pc, devices=jax.devices()[:1])
-    rt = Runtime(mesh=mesh, pc=pc, impl="ref")
-    return Trainer(cfg, rt,
-                   OptConfig(lr=3e-3, warmup_steps=5, total_steps=steps),
-                   DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8,
-                              cp=pc.cp),
+def _mk(cfg, d, steps, ckpt_every=10, grad_accum=1):
+    plan = build_plan(cfg, opt=OptConfig(lr=3e-3, warmup_steps=5,
+                                         total_steps=steps),
+                      devices=jax.devices()[:1], grad_accum=grad_accum,
+                      seq_len=64, global_batch=8)
+    return Trainer(plan, plan.data_config(64, 8),
                    TrainerConfig(num_steps=steps, ckpt_dir=d,
                                  ckpt_every=ckpt_every, log_every=1000))
 
@@ -49,6 +46,18 @@ def test_straggler_monitor_integrated():
         rep = tr.monitor.report()
         assert rep["steps"] == 12
         assert rep["median_s"] > 0
+
+
+def test_trainer_with_grad_accum_learns():
+    """The microbatched trainer loop (accum=2, (2, 4, S) batches) still
+    reduces the loss end to end."""
+    cfg = get_reduced("qwen3-1.7b")
+    with tempfile.TemporaryDirectory() as d:
+        tr = _mk(cfg, d, steps=30, ckpt_every=100, grad_accum=2)
+        assert tr.data.batch(0)["tokens"].shape == (2, 4, 64)
+        losses = tr.run()
+        assert losses[-1] < losses[0] - 0.3, (losses[0], losses[-1])
+        assert all(np.isfinite(losses))
 
 
 def test_production_mesh_shapes():
