@@ -265,6 +265,135 @@ def bench_train_step(out_path: str = "BENCH_train_step.json"):
         json.dump(bench, f, indent=2)
 
 
+def bench_serve(out_path: str = "BENCH_serve.json"):
+    """Continuous-batching paged engine vs the fixed-batch contiguous
+    baseline on uniform and mixed-length request streams, written to
+    ``BENCH_serve.json``.
+
+    Both schedulers run the same reduced model on this host with the same
+    4 decode slots, their jitted steps compiled once (rep 0 of each
+    stream warms, rep 1 is timed), and the **same KV-cache byte budget**
+    (2048 token-slots): the fixed baseline spends it as 4 contiguous
+    worst-case caches of 512, the paged engine as a shared 128-block
+    pool.  The fixed baseline processes requests in submission-order
+    groups: prompts padded to the per-stream max, decode runs until the
+    *longest* request of the group finishes — the straggler effect the
+    engine's in-place retirement removes.  Tokens/s counts only requested
+    tokens; per-request latency is submit→finish (queueing included).
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_reduced
+    from repro.core.plan import build_plan
+    from repro.launch.serve import generate, make_generate_fns
+    from repro.models.model import init_params
+    from repro.serve import SamplingParams, ServeEngine
+
+    cfg = get_reduced("qwen3-1.7b")
+    plan = build_plan(cfg, devices=jax.devices()[:1], impl="ref")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rt = plan.rt
+    b_slots = 4
+    rng = np.random.default_rng(0)
+    # (prompt_len, gen) per request; mixed spans ~32..512 total tokens
+    # with bimodal gen lengths — the straggler case fixed batching pays for
+    streams = {
+        "uniform": [(64, 32)] * 8,
+        "mixed": [(int(p), int(g)) for p, g in
+                  zip(rng.integers(24, 385, size=8),
+                      rng.choice([8, 16, 96, 128], size=8))],
+    }
+    max_total = max(p + g for reqs in streams.values() for p, g in reqs)
+    prompts = {name: [rng.integers(0, cfg.vocab, size=p)
+                      for p, _ in reqs]
+               for name, reqs in streams.items()}
+
+    bench = {"config": {"arch": cfg.name, "max_batch": b_slots,
+                        "page_size": 16, "streams": streams},
+             "cases": []}
+
+    def pctl(lats, q):
+        lats = sorted(lats)
+        return lats[min(len(lats) - 1, int(len(lats) * q))]
+
+    # -- paged engine: one jit set reused across streams.  Same pool bytes
+    # (and slots) as the baseline's 4 × 512 contiguous caches, spent as a
+    # shared 128-block pool — decode views follow the active lengths.
+    from repro.serve.engine import EngineConfig
+    assert max_total <= 512, max_total
+    spec = EngineConfig(page_size=16, num_blocks=128,
+                        max_blocks_per_seq=32, max_batch=b_slots,
+                        prefill_chunk=128)
+    with plan.mesh:
+        eng = ServeEngine(plan, params, spec)
+        eng.warmup(prompt_lens=(16, 32, 64, 128))   # compile all buckets
+        for name, reqs in streams.items():
+            for rep in range(2):       # rep 0 warms every (chunk, view) jit
+                for (p_len, gen), p in zip(reqs, prompts[name]):
+                    eng.submit(p, SamplingParams(), max_new_tokens=gen)
+                res = eng.run()
+                lats = [r["latency_s"] for r in res["requests"].values()]
+            bench["cases"].append({
+                "name": f"{name}.paged",
+                "tokens_per_s": round(res["tokens_per_s"], 2),
+                "p50_ms": round(pctl(lats, 0.5) * 1e3, 1),
+                "p99_ms": round(pctl(lats, 0.99) * 1e3, 1),
+                "generated": res["generated"],
+                "wall_s": round(res["wall_s"], 3)})
+            _row(f"serve.{name}.paged", res["wall_s"] * 1e6,
+                 f"tok_s={res['tokens_per_s']:.1f}")
+
+    # -- fixed-batch baseline: launch.serve.generate itself (token parity
+    # with the engine pinned by tests/test_serve.py), with its jitted
+    # steps hoisted once via make_generate_fns so repeated groups reuse
+    # compiles.  Prompts pad to the *per-stream* max and each group
+    # decodes to its own longest request — the baseline's honest best
+    # schedule at fixed batching.
+    fns = make_generate_fns(cfg, rt)
+
+    def run_fixed(reqs, toks):
+        s_pad = max(p for p, _ in reqs)
+        t0 = time.perf_counter()
+        lats, generated = [], 0
+        for i in range(0, len(reqs), b_slots):
+            group = reqs[i:i + b_slots]
+            rows = toks[i:i + b_slots]
+            tokens = np.zeros((b_slots, s_pad), np.int32)
+            for j, r in enumerate(rows):
+                tokens[j, :len(r)] = r
+            out = generate(params, cfg, rt, jnp.asarray(tokens),
+                           gen=max(g for _, g in group), fns=fns)
+            jax.block_until_ready(out)
+            t_group = time.perf_counter() - t0
+            generated += sum(g for _, g in group)
+            lats += [t_group] * len(group)     # group finishes together
+        return generated, time.perf_counter() - t0, lats
+
+    with plan.mesh:
+        for name, reqs in streams.items():
+            run_fixed(reqs, prompts[name])         # warm the jitted steps
+            generated, wall, lats = run_fixed(reqs, prompts[name])
+            tok_s = generated / max(wall, 1e-9)
+            bench["cases"].append({
+                "name": f"{name}.fixed",
+                "tokens_per_s": round(tok_s, 2),
+                "p50_ms": round(pctl(lats, 0.5) * 1e3, 1),
+                "p99_ms": round(pctl(lats, 0.99) * 1e3, 1),
+                "generated": generated,
+                "wall_s": round(wall, 3)})
+            _row(f"serve.{name}.fixed", wall * 1e6,
+                 f"tok_s={tok_s:.1f}")
+
+    by_name = {c["name"]: c for c in bench["cases"]}
+    for name in streams:
+        speed = (by_name[f"{name}.paged"]["tokens_per_s"]
+                 / max(by_name[f"{name}.fixed"]["tokens_per_s"], 1e-9))
+        bench["config"][f"{name}_paged_speedup"] = round(speed, 2)
+        _row(f"serve.{name}.speedup", 0.0, f"paged_vs_fixed={speed:.2f}x")
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=2)
+
+
 def main() -> None:
     if len(sys.argv) > 1 and sys.argv[1] == "ring":
         print("name,us_per_call,derived")
@@ -273,6 +402,10 @@ def main() -> None:
     if len(sys.argv) > 1 and sys.argv[1] == "train":
         print("name,us_per_call,derived")
         bench_train_step()
+        return
+    if len(sys.argv) > 1 and sys.argv[1] == "serve":
+        print("name,us_per_call,derived")
+        bench_serve()
         return
     print("name,us_per_call,derived")
     t2_endtoend()
@@ -284,6 +417,7 @@ def main() -> None:
     micro_ring_step()
     micro_train_step()
     bench_train_step()
+    bench_serve()
 
 
 if __name__ == "__main__":

@@ -1,28 +1,53 @@
-"""Batched serving: prefill + greedy decode with context-sharded KV caches
-(flash-decoding combine), incl. a hybrid SSM model with O(1) state.
+"""Batched serving two ways:
+
+* the continuous-batching paged engine (dense / MoE / MLA families):
+  mixed-length requests share fixed decode slots, chunked prefill
+  interleaves with batched decode, finished sequences retire in place;
+* the fixed-batch contiguous baseline (``generate``) for families the
+  engine does not page (here: a hybrid SSM model with O(1) state).
 
     PYTHONPATH=src python examples/serve_batched.py
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import numpy as np
 import jax, jax.numpy as jnp
 from repro.configs import get_reduced
 from repro.core.plan import build_plan
 from repro.launch.serve import generate
 from repro.models.model import init_params
+from repro.serve import SamplingParams, ServeEngine
 
 
 def main():
-    for arch in ("qwen3-1.7b", "deepseek-v2-lite-16b", "falcon-mamba-7b"):
+    rng = np.random.default_rng(0)
+    for arch in ("qwen3-1.7b", "deepseek-v2-lite-16b"):
         cfg = get_reduced(arch)
         plan = build_plan(cfg, devices=jax.devices()[:1])
         params = init_params(cfg, jax.random.PRNGKey(0))
-        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0,
-                                    cfg.vocab)
+        spec = plan.serve_spec(page_size=8, max_batch=2, max_seq_len=64,
+                               prefill_chunk=16)
         with plan.mesh:
-            out = generate(params, cfg, plan.rt, tokens, gen=8)
-        print(f"{arch}: prompt (2, 24) -> generated {out.shape}")
+            eng = ServeEngine(plan, params, spec)
+            for i in range(4):          # mixed-length request stream
+                eng.submit(rng.integers(0, cfg.vocab, size=10 + 6 * i),
+                           SamplingParams(temperature=0.7, top_p=0.9,
+                                          seed=i),
+                           max_new_tokens=4 + 2 * i)
+            res = eng.run()
+        print(f"{arch}: {res['generated']} tokens from 4 requests on "
+              f"{spec.max_batch} slots "
+              f"({res['engine_steps']} engine steps, "
+              f"{eng.decode_traces} decode trace)")
+
+    cfg = get_reduced("falcon-mamba-7b")       # no paged path: baseline
+    plan = build_plan(cfg, devices=jax.devices()[:1])
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, size=(2, 24)))
+    with plan.mesh:
+        out = generate(params, cfg, plan.rt, tokens, gen=8)
+    print(f"falcon-mamba-7b: prompt (2, 24) -> generated {out.shape}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,120 @@
+"""Bench-regression gate: diff freshly produced BENCH_*.json against the
+baselines committed at HEAD and fail on step-time regressions.
+
+    python scripts/bench_gate.py [--tol 0.25] [--base-ref HEAD]
+
+For every metric the gate knows about it compares the working-tree value
+(the one the benches just rewrote) against ``git show HEAD:<file>`` and
+fails when the *regression direction* exceeds ``tol × noise_factor``:
+lower-is-better metrics (µs, latency ms) may grow, higher-is-better
+(steps/s, tokens/s) may shrink.  Interpret-mode kernels and wall-clock
+serving/training numbers get a 3× noise factor — interpreter overhead and
+host load are not the tracked signal; the trend of each impl against
+itself is.  Missing baselines (a bench introduced by the current change)
+are reported and skipped, so adding a bench never blocks its own PR.
+Env override: ``BENCH_GATE_TOL``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+#: (file, case-key fn, [(metric, direction, noise_factor)])
+LOWER, HIGHER = "lower", "higher"
+
+
+def _ring_specs(case):
+    noise = 3.0 if "interpret" in case["impl"] else 1.5
+    return case["impl"], [("fwd_us", LOWER, noise), ("bwd_us", LOWER, noise)]
+
+
+def _train_specs(case):
+    return f"accum{case['grad_accum']}", [
+        ("steps_per_s_sync", HIGHER, 3.0),
+        ("steps_per_s_async", HIGHER, 3.0)]
+
+
+def _serve_specs(case):
+    return case["name"], [("tokens_per_s", HIGHER, 3.0),
+                          ("p50_ms", LOWER, 3.0), ("p99_ms", LOWER, 3.0)]
+
+
+FILES = {
+    "BENCH_ring.json": _ring_specs,
+    "BENCH_train_step.json": _train_specs,
+    "BENCH_serve.json": _serve_specs,
+}
+
+
+def load_baseline(path: str, ref: str):
+    try:
+        out = subprocess.run(["git", "show", f"{ref}:{path}"],
+                             capture_output=True, text=True, check=True)
+        return json.loads(out.stdout)
+    except (subprocess.CalledProcessError, json.JSONDecodeError):
+        return None
+
+
+def compare(fresh: dict, base: dict, spec_fn, tol: float):
+    """Yields (case.metric, base, fresh, limit, regressed)."""
+    base_by_key = {}
+    for case in base.get("cases", []):
+        key, _ = spec_fn(case)
+        base_by_key[key] = case
+    for case in fresh.get("cases", []):
+        key, metrics = spec_fn(case)
+        ref = base_by_key.get(key)
+        if ref is None:
+            continue
+        for metric, direction, noise in metrics:
+            if metric not in case or metric not in ref:
+                continue
+            b, f = float(ref[metric]), float(case[metric])
+            limit = tol * noise
+            if b <= 0:
+                continue
+            delta = (f - b) / b if direction == LOWER else (b - f) / b
+            yield f"{key}.{metric}", b, f, limit, delta > limit
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tol", type=float,
+                    default=float(os.environ.get("BENCH_GATE_TOL", 0.25)))
+    ap.add_argument("--base-ref", default="HEAD")
+    args = ap.parse_args()
+
+    os.chdir(os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
+    failures, checked = [], 0
+    for path, spec_fn in FILES.items():
+        if not os.path.exists(path):
+            print(f"[bench-gate] {path}: no fresh file, skipped")
+            continue
+        with open(path) as f:
+            fresh = json.load(f)
+        base = load_baseline(path, args.base_ref)
+        if base is None:
+            print(f"[bench-gate] {path}: no committed baseline at "
+                  f"{args.base_ref}, skipped (new bench)")
+            continue
+        for name, b, f_, limit, bad in compare(fresh, base, spec_fn,
+                                               args.tol):
+            checked += 1
+            tag = "REGRESSION" if bad else "ok"
+            print(f"[bench-gate] {path}:{name} base={b:.2f} "
+                  f"fresh={f_:.2f} limit=+{limit:.0%} {tag}")
+            if bad:
+                failures.append(f"{path}:{name}")
+    if failures:
+        print(f"[bench-gate] FAILED: {len(failures)} regression(s): "
+              f"{', '.join(failures)}")
+        return 1
+    print(f"[bench-gate] passed ({checked} metrics within tolerance)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

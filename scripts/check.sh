@@ -1,17 +1,30 @@
 #!/usr/bin/env bash
-# Tier-1 gate + benches + plan smoke.  Run from anywhere:
-#     scripts/check.sh
-# Tests must pass; the benches rewrite BENCH_ring.json /
-# BENCH_train_step.json so perf regressions on the ring hot path and the
-# (accumulated) train step show up in the BENCH_* trajectory; the dryrun
-# --plan invocation fails fast on ExecutionPlan regressions for every
-# production cell of one arch without compiling anything.
+# Tiered gate.  Run from anywhere:
+#     scripts/check.sh --fast    # tier-1 pytest only (single-device tests;
+#                                # dist/slow suites deselected by marker)
+#     scripts/check.sh           # full: all tests + benches + bench gate +
+#                                # plan smoke + serve smoke
+# The full tier rewrites BENCH_ring.json / BENCH_train_step.json /
+# BENCH_serve.json and diffs them against the committed baselines
+# (scripts/bench_gate.py) so perf regressions on the ring hot path, the
+# (accumulated) train step, and the serving engine show up immediately;
+# the dryrun --plan invocation fails fast on ExecutionPlan regressions
+# for every production cell of one arch without compiling anything.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 
+if [[ "${1:-}" == "--fast" ]]; then
+    python -m pytest -q -m "not dist and not slow"
+    exit 0
+fi
+
 python -m pytest -x -q
 python benchmarks/run.py ring
 python benchmarks/run.py train
+python benchmarks/run.py serve
+python scripts/bench_gate.py
 python -m repro.launch.dryrun --plan --arch qwen3-1.7b --shape all
+python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+    --prompt-len 24 --gen 8 --batch 2 --requests 4

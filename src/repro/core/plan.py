@@ -59,6 +59,10 @@ ACT_UNITS = {"none": 14, "scpp": 2, "full": 1}
 #: the rest is headroom for activations, grads and XLA workspace.
 STATE_BUDGET_FRAC = 0.6
 
+#: serve mode: fraction of the device budget available to bf16 weights +
+#: the paged-KV block pool (the rest is activation/workspace headroom).
+SERVE_BUDGET_FRAC = 0.8
+
 #: AMSP sharding modes, smallest extent first (Full-Replica → dp-only →
 #: sp-only → full dp×sp).  ``build_plan`` picks the first that fits.
 ZERO_MODES = (
@@ -131,6 +135,44 @@ def choose_remat(cfg, budget_bytes: float, state_dev: float,
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """Geometry of the paged-KV serve engine, chosen by the memory model.
+
+    Field names match ``repro.serve.engine.EngineConfig`` so a spec can be
+    handed straight to ``ServeEngine``.
+    """
+    page_size: int
+    num_blocks: int              # physical blocks in the shared pool
+    max_blocks_per_seq: int      # block-table width (longest request)
+    max_batch: int               # engine decode slots
+    prefill_chunk: int
+    paged_bytes_per_token: int   # KV bytes/token across paged layers
+    window_bytes: int            # fixed ring-buffer bytes per slot
+
+
+def serve_kv_bytes(cfg) -> tuple[int | None, int]:
+    """(paged bytes/token, fixed window-ring bytes per slot) for a config;
+    (None, 0) when the family has no paged decode path (ssm state is
+    O(1), encdec caches are bounded by max_positions)."""
+    if cfg.family not in ("dense", "moe"):
+        return None, 0
+    itemsize = cfg.compute_dtype.itemsize
+    if cfg.mla is not None:
+        m = cfg.mla
+        return (m.kv_lora + m.d_rope) * itemsize * cfg.num_layers, 0
+    groups = cfg.num_layers // cfg.period
+    per_tok, win = 0, 0
+    for slot in range(cfg.period):
+        kind = cfg.attn_kind(slot)
+        kv = 2 * cfg.n_kv_heads * cfg.hd * itemsize * groups
+        if kind.window is None:
+            per_tok += kv
+        else:
+            win += kv * kind.window
+    return per_tok, win
+
+
+@dataclasses.dataclass(frozen=True)
 class ExecutionPlan:
     """Every cross-layer execution decision, made once.
 
@@ -166,6 +208,32 @@ class ExecutionPlan:
     def serve_shardings(self, params):
         """Weight-stationary (inference-TP) shardings for serving."""
         return tp_shardings(params, self.mesh)
+
+    def serve_spec(self, *, page_size: int = 16, max_batch: int = 8,
+                   max_seq_len: int | None = None,
+                   prefill_chunk: int = 64) -> ServeSpec | None:
+        """Paged-serving geometry from the memory model: bf16 weights and
+        per-slot window rings are charged against the budget first; the
+        paged block pool takes what's left, capped at the usable maximum
+        ``max_batch × max_blocks_per_seq`` (blocks beyond every slot's
+        worst case can never be handed out).  None for families without a
+        paged decode path."""
+        per_tok, win_bytes = serve_kv_bytes(self.cfg)
+        if per_tok is None:
+            return None
+        max_seq = max_seq_len or self.seq_len or 4096
+        max_blocks_per_seq = -(-max_seq // page_size)
+        headroom = (self.memory_budget * SERVE_BUDGET_FRAC
+                    - self.mem.get("n_params", 0) * HALF_BYTES_PER_PARAM
+                    - max_batch * win_bytes)
+        cap = max_batch * max_blocks_per_seq
+        fit = int(headroom // max(per_tok * page_size, 1))
+        num_blocks = max(min(fit, cap), max_blocks_per_seq)
+        return ServeSpec(page_size=page_size, num_blocks=num_blocks,
+                         max_blocks_per_seq=max_blocks_per_seq,
+                         max_batch=max_batch, prefill_chunk=prefill_chunk,
+                         paged_bytes_per_token=per_tok,
+                         window_bytes=win_bytes)
 
     def batch_shardings(self, kind: str = "train"):
         """NamedShardings for a step's batch dict.  Train batches carry a
@@ -255,6 +323,19 @@ class ExecutionPlan:
             f"acts≈{_fmt_bytes(m.get('act_dev', 0))} "
             f"total≈{_fmt_bytes(m.get('total_dev', 0))} "
             f"/ budget {_fmt_bytes(self.memory_budget)}")
+        sv = self.serve_spec()
+        if sv is None:
+            lines.append(f"  serve       paged=n/a (family={cfg.family})")
+        else:
+            pool = sv.num_blocks * sv.page_size * sv.paged_bytes_per_token
+            lines.append(
+                f"  serve       page={sv.page_size} "
+                f"blocks={sv.num_blocks} "
+                f"(pool={_fmt_bytes(pool)} kv/token="
+                f"{_fmt_bytes(sv.paged_bytes_per_token)}) "
+                f"max_batch={sv.max_batch} "
+                f"max_seq={sv.max_blocks_per_seq * sv.page_size} "
+                f"prefill_chunk={sv.prefill_chunk}")
         return "\n".join(lines)
 
 

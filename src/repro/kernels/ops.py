@@ -157,7 +157,7 @@ def flash_attention(q, k, v, *, causal: bool = False,
 def flash_fwd_chunk(q, k, v, *, causal: bool = False,
                     window: int | None = None, softcap: float = 0.0,
                     scale: float | None = None,
-                    kv_valid_len: int | None = None,
+                    kv_valid_len: int | None = None, kv_start=None,
                     mask_offset=None, band: BandMask | None = None,
                     impl: str = "auto",
                     block_q: int = 128, block_k: int = 128):
@@ -167,19 +167,28 @@ def flash_fwd_chunk(q, k, v, *, causal: bool = False,
 
     ``mask_offset`` / ``band`` may be traced: the Pallas path threads them
     into the kernel as scalar-prefetch operands and keeps its block-skip
-    logic (no downgrade to the jnp path).
+    logic (no downgrade to the jnp path).  Per-request ``(B,)`` ragged
+    offsets (``mask_offset`` / ``kv_valid_len`` / ``kv_start`` — the
+    continuous-batching decode case) are ref-path only.
     """
     impl = resolve_impl(impl)
+    ragged = any(isinstance(x, jax.Array) and x.ndim >= 1
+                 for x in (mask_offset, kv_valid_len, kv_start))
+    if kv_start is not None or ragged:
+        if impl not in ("ref", "flashref"):
+            raise NotImplementedError(
+                "per-request ragged masks (kv_start / batched offsets) are "
+                f"only lowered on the ref paths, got impl={impl!r}")
     if impl == "flashref":
         return ref_mod.attention_ref_chunked(
             q, k, v, causal=causal, window=window, softcap=softcap,
-            scale=scale, kv_valid_len=kv_valid_len, mask_offset=mask_offset,
-            band=band)
+            scale=scale, kv_valid_len=kv_valid_len, kv_start=kv_start,
+            mask_offset=mask_offset, band=band)
     if impl == "ref":
         return ref_mod.attention_ref(
             q, k, v, causal=causal, window=window, softcap=softcap,
-            scale=scale, kv_valid_len=kv_valid_len, mask_offset=mask_offset,
-            band=band)
+            scale=scale, kv_valid_len=kv_valid_len, kv_start=kv_start,
+            mask_offset=mask_offset, band=band)
     interpret = impl == "pallas_interpret"
     b, lq, hq, d = q.shape
     _, lk, hkv, _ = k.shape

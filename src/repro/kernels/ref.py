@@ -75,28 +75,42 @@ class BandMask(NamedTuple):
                              q_seg=max(self.q_seg - q0, 0))
 
 
+def _per_batch(x):
+    """Lift a per-request (B,) offset to broadcast against (Lq, Lk) index
+    grids — masks become (B, Lq, Lk).  Scalars pass through untouched."""
+    if isinstance(x, jax.Array) and x.ndim >= 1:
+        return x.reshape(x.shape[0], 1, 1)
+    return x
+
+
 def _logical_pos(idx, off_lo, off_hi, seg: int):
+    off_lo, off_hi = _per_batch(off_lo), _per_batch(off_hi)
     if seg == 0:
         return idx + off_hi
     return idx + jnp.where(idx < seg, off_lo, off_hi)
 
 
 def _build_mask(lq: int, lk: int, *, causal: bool, window: int | None,
-                kv_valid_len: int | None,
+                kv_valid_len: int | None, kv_start=None,
                 mask_offset=None, band: BandMask | None = None
                 ) -> jax.Array | None:
-    """Boolean (Lq, Lk) visibility mask, or None if everything is visible.
+    """Boolean (Lq, Lk) — or (B, Lq, Lk) for per-request offsets —
+    visibility mask, or None if everything is visible.
 
     ``mask_offset`` overrides the bottom-right alignment delta ``lk - lq``;
     it may be a traced scalar (ring attention passes the *logical* chunk
-    distance, which is rank-dependent under SPMD).  ``band`` generalizes it
-    to the segmented zigzag layout and takes precedence.
+    distance, which is rank-dependent under SPMD) or a per-request ``(B,)``
+    array (ragged continuous-batching decode).  ``band`` generalizes it
+    to the segmented zigzag layout and takes precedence.  ``kv_valid_len``
+    and ``kv_start`` bound the visible key *physical* index range
+    ``[kv_start, kv_valid_len)``; both may also be ``(B,)``.
     """
     if band is not None and not causal and window is None:
         raise ValueError("band only shifts the causal/window band anchors; "
                          "passing one with causal=False and window=None "
                          "would be silently ignored")
-    if not causal and window is None and kv_valid_len is None:
+    if not causal and window is None and kv_valid_len is None \
+            and kv_start is None:
         return None
     if band is None:
         band = BandMask.uniform((lk - lq) if mask_offset is None
@@ -107,18 +121,20 @@ def _build_mask(lq: int, lk: int, *, causal: bool, window: int | None,
     k_log = _logical_pos(kj, band.k_off_lo, band.k_off_hi, band.k_seg)
     mask = jnp.ones((lq, lk), dtype=bool)
     if causal:
-        mask &= k_log <= q_log
+        mask = mask & (k_log <= q_log)
     if window is not None:
-        mask &= k_log >= q_log - (window - 1)
+        mask = mask & (k_log >= q_log - (window - 1))
     if kv_valid_len is not None:
-        mask &= kj < kv_valid_len
+        mask = mask & (kj < _per_batch(kv_valid_len))
+    if kv_start is not None:
+        mask = mask & (kj >= _per_batch(kv_start))
     return mask
 
 
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = False, window: int | None = None,
                   softcap: float = 0.0, scale: float | None = None,
-                  kv_valid_len: int | None = None,
+                  kv_valid_len: int | None = None, kv_start=None,
                   mask_offset=None, band: BandMask | None = None,
                   bias: jax.Array | None = None):
     """Dense fp32 attention oracle.  Returns (out, lse).
@@ -147,16 +163,18 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     if bias is not None:
         s = s + jnp.transpose(bias.astype(jnp.float32), (0, 2, 1, 3))
     mask = _build_mask(lq, lk, causal=causal, window=window,
-                       kv_valid_len=kv_valid_len, mask_offset=mask_offset,
-                       band=band)
+                       kv_valid_len=kv_valid_len, kv_start=kv_start,
+                       mask_offset=mask_offset, band=band)
     if mask is not None:
-        s = jnp.where(mask[None, :, None], s, NEG_INF)
+        # s is (B, Lq, H, Lk): lift (Lq, Lk) or per-request (B, Lq, Lk).
+        mask_s = mask[None, :, None] if mask.ndim == 2 else mask[:, :, None]
+        s = jnp.where(mask_s, s, NEG_INF)
 
     m = jnp.max(s, axis=-1)                      # (B, Lq, H)
     m_safe = jnp.where(m <= NEG_INF / 2, 0.0, m)
     p = jnp.exp(s - m_safe[..., None]).astype(sdt)
     if mask is not None:
-        p = jnp.where(mask[None, :, None], p, 0)
+        p = jnp.where(mask_s, p, 0)
     l = jnp.sum(p.astype(jnp.float32), axis=-1)  # (B, Lq, H)
     l_safe = jnp.where(l == 0.0, 1.0, l)
     out = jnp.einsum("bihj,bjhd->bihd", p, v,
@@ -170,7 +188,7 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
 def attention_bwd_ref(q, k, v, out, lse, do, *,
                       causal: bool = False, window: int | None = None,
                       softcap: float = 0.0, scale: float | None = None,
-                      kv_valid_len: int | None = None,
+                      kv_valid_len: int | None = None, kv_start=None,
                       mask_offset=None, band: BandMask | None = None):
     """Chunk-level attention backward given *global* (out, lse).
 
@@ -198,12 +216,14 @@ def attention_bwd_ref(q, k, v, out, lse, do, *,
     s_raw = jnp.einsum("bihd,bjhd->bhij", qf, kf) * scale
     s = softcap * jnp.tanh(s_raw / softcap) if softcap else s_raw
     mask = _build_mask(lq, lk, causal=causal, window=window,
-                       kv_valid_len=kv_valid_len, mask_offset=mask_offset,
-                       band=band)
+                       kv_valid_len=kv_valid_len, kv_start=kv_start,
+                       mask_offset=mask_offset, band=band)
     shift = jnp.where(lse <= NEG_INF / 2, 0.0, lse)      # (B,H,Lq)
     p = jnp.exp(s - shift[..., None])
     if mask is not None:
-        p = jnp.where(mask[None, None], p, 0.0)
+        # s is (B, H, Lq, Lk) here.
+        mask_s = mask[None, None] if mask.ndim == 2 else mask[:, None]
+        p = jnp.where(mask_s, p, 0.0)
     dsum = jnp.sum(dof * outf, axis=-1)                  # (B,Lq,H)
     dsum = jnp.transpose(dsum, (0, 2, 1))                # (B,H,Lq)
     dp = jnp.einsum("bihd,bjhd->bhij", dof, vf)
@@ -274,6 +294,7 @@ def _chunk_band(band, mask_offset, lq: int, lk: int, q0: int, *,
 
 def attention_ref_chunked(q, k, v, *, causal=False, window=None,
                           softcap=0.0, scale=None, kv_valid_len=None,
+                          kv_start=None,
                           mask_offset=None, band: BandMask | None = None,
                           q_chunk: int = 1024):
     """Flash-semantics lowering of the oracle: scores materialize only per
@@ -287,7 +308,7 @@ def attention_ref_chunked(q, k, v, *, causal=False, window=None,
     if len(bounds) == 1:
         return attention_ref(q, k, v, causal=causal, window=window,
                              softcap=softcap, scale=scale,
-                             kv_valid_len=kv_valid_len,
+                             kv_valid_len=kv_valid_len, kv_start=kv_start,
                              mask_offset=mask_offset, band=band)
     lk = k.shape[1]
     outs, lses = [], []
@@ -295,7 +316,7 @@ def attention_ref_chunked(q, k, v, *, causal=False, window=None,
         qc = q[:, q0:q0 + q_chunk]
         o, l = attention_ref(qc, k, v, causal=causal, window=window,
                              softcap=softcap, scale=scale,
-                             kv_valid_len=kv_valid_len,
+                             kv_valid_len=kv_valid_len, kv_start=kv_start,
                              band=_chunk_band(band, mask_offset, lq, lk,
                                               q0, causal=causal,
                                               window=window))

@@ -1,13 +1,15 @@
-"""Serving launcher: batched prefill + greedy decode loop.
+"""Serving launcher: continuous-batching paged engine (dense/moe
+families) or the fixed-batch contiguous baseline.
 
     python -m repro.launch.serve --arch qwen3-1.7b --smoke \
-        --prompt-len 32 --gen 16 --batch 2
+        --prompt-len 32 --gen 16 --batch 2 --requests 6 --engine paged
 """
 from __future__ import annotations
 
 import argparse
 import time
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -16,23 +18,51 @@ from repro.core.plan import build_plan
 from repro.core.topology import ParallelConfig
 from repro.models.decode import decode_step, grow_caches, prefill
 from repro.models.model import init_params
+from repro.serve import SamplingParams, ServeEngine
 
 
-def generate(params, cfg, rt, tokens, frames=None, gen: int = 16):
-    """Greedy generation.  tokens: (B, S_prompt)."""
+def make_generate_fns(cfg, rt):
+    """Jitted (prefill, decode_step, trace-counter) triple for
+    ``generate``.  Hoist one of these out of any per-group loop —
+    ``generate`` builds a fresh triple per call otherwise, and fresh jit
+    closures re-trace identical shapes."""
+    traces = {"prefill": 0, "decode": 0}
+
+    def _pf(p, bt):
+        traces["prefill"] += 1
+        return prefill(p, bt, rt, cfg)
+
+    def _step(p, c, t, pos):
+        traces["decode"] += 1
+        return decode_step(p, c, t, pos, rt, cfg)
+
+    return jax.jit(_pf), jax.jit(_step), traces
+
+
+def generate(params, cfg, rt, tokens, frames=None, gen: int = 16,
+             return_stats: bool = False, fns=None):
+    """Fixed-batch greedy baseline.  tokens: (B, S_prompt).
+
+    The cache is padded to the full ``prompt + gen`` extent once, before
+    the loop, so every decode step runs at one shape — ``decode_step``
+    traces exactly once per stream (asserted in tests via
+    ``return_stats``); the paged engine gets the same guarantee from its
+    block reservation.  Pass ``fns=make_generate_fns(cfg, rt)`` when
+    calling in a loop so compiled steps are reused across groups.
+    """
     b, s = tokens.shape
     batch = {"tokens": tokens}
     if frames is not None:
         batch["frames"] = frames
-    pf = jax.jit(lambda p, bt: prefill(p, bt, rt, cfg))
-    step = jax.jit(lambda p, c, t, pos: decode_step(p, c, t, pos, rt, cfg))
+    pf, step, traces = fns or make_generate_fns(cfg, rt)
     logits, caches = pf(params, batch)
     caches = grow_caches(cfg, caches, gen)
     out = [jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)]
     for t in range(gen - 1):
         logits, caches = step(params, caches, out[-1], jnp.int32(s + t))
         out.append(jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32))
-    return jnp.concatenate(out, axis=1)
+    toks = jnp.concatenate(out, axis=1)
+    return (toks, traces) if return_stats else toks
 
 
 def main():
@@ -40,7 +70,17 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=2,
+                    help="engine decode slots / baseline batch size")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="request-stream length (default: --batch)")
+    ap.add_argument("--engine", choices=["paged", "fixed"], default=None,
+                    help="default: paged for dense/moe, fixed otherwise")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=64)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args()
 
@@ -56,22 +96,57 @@ def main():
     print(plan.describe())
     mesh, rt = plan.mesh, plan.rt
 
+    engine_kind = args.engine or (
+        "paged" if cfg.family in ("dense", "moe") else "fixed")
+    n_req = args.requests or args.batch
     params = init_params(cfg, jax.random.PRNGKey(0))
-    tokens = jax.random.randint(jax.random.PRNGKey(1),
-                                (args.batch, args.prompt_len), 0, cfg.vocab)
-    frames = None
-    if cfg.family == "encdec":
-        frames = jax.random.normal(
-            jax.random.PRNGKey(2),
-            (args.batch, cfg.enc_frames, cfg.d_model), jnp.float32)
-    with mesh:
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, size=args.prompt_len)
+               for _ in range(n_req)]
+
+    if engine_kind == "paged":
+        spec = plan.serve_spec(
+            page_size=args.page_size, max_batch=args.batch,
+            max_seq_len=args.prompt_len + args.gen,
+            prefill_chunk=args.prefill_chunk)
+        sp = SamplingParams(temperature=args.temperature,
+                            top_k=args.top_k, top_p=args.top_p)
+        with mesh:
+            eng = ServeEngine(plan, params, spec)
+            for p in prompts:
+                eng.submit(p, sp, max_new_tokens=args.gen)
+            res = eng.run()
+        lats = sorted(r["latency_s"] for r in res["requests"].values())
+        p50 = lats[len(lats) // 2]
+        p99 = lats[min(len(lats) - 1, int(len(lats) * 0.99))]
+        print(f"paged engine: {res['generated']} tokens from {n_req} "
+              f"requests in {res['wall_s']:.2f}s "
+              f"({res['tokens_per_s']:.1f} tok/s, p50={p50:.2f}s "
+              f"p99={p99:.2f}s, {res['engine_steps']} engine steps, "
+              f"decode traces={eng.decode_traces})")
+        first = res["requests"][0]["tokens"]
+        print(f"request 0: {first[:12]}")
+    else:
+        frames = None
+        if cfg.family == "encdec":
+            frames = jax.random.normal(
+                jax.random.PRNGKey(2),
+                (args.batch, cfg.enc_frames, cfg.d_model), jnp.float32)
+        done = 0
         t0 = time.perf_counter()
-        out = jax.device_get(generate(params, cfg, rt, tokens, frames,
-                                      args.gen))
+        with mesh:
+            fns = make_generate_fns(cfg, rt)    # one compile across groups
+            for i in range(0, n_req, args.batch):
+                group = prompts[i:i + args.batch]
+                tokens = jnp.asarray(np.stack(
+                    group + [group[-1]] * (args.batch - len(group))))
+                out = jax.device_get(generate(params, cfg, rt, tokens,
+                                              frames, args.gen, fns=fns))
+                done += len(group) * args.gen
         dt = time.perf_counter() - t0
-    print(f"generated {out.shape} in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s)")
-    print(out[:, :12])
+        print(f"fixed batch: generated {done} tokens in {dt:.2f}s "
+              f"({done / dt:.1f} tok/s)")
+        print(out[:, :12])
 
 
 if __name__ == "__main__":

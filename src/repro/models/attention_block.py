@@ -213,25 +213,33 @@ def decode_attention(q, k_cache, v_cache, pos, rt: Runtime, *,
     q: (B, 1, H, d) — heads sharded over the head axis by GSPMD.
     k_cache/v_cache: (B, S_max, Hkv, d) — S sharded over (outer, inner),
     heads over the head axis (or replicated when ``kv_replicated`` — the
-    MLA latent cache is a single logical head).  ``pos`` (scalar int32):
-    current length - 1.
+    MLA latent cache is a single logical head).  ``pos``: current
+    length - 1, either a scalar int32 (uniform batch) or a per-request
+    ``(B,)`` vector (ragged continuous-batching decode; entries of ``-1``
+    mark inactive slots, which see no keys and emit zeros).
 
     ``ring_full``: for sliding-window ring-buffer caches — the (traced)
-    number of live slots; every live slot is attendable (no causal band).
+    number of live slots (scalar or ``(B,)``); every live slot is
+    attendable (no causal band).
 
     Every context rank computes partial attention over its cache shard with
     a masked valid length, then one pmax+psum pair combines the partials —
     flash-decoding on the 2D grid (no ring needed for q_len = 1).
     """
     cp_axes = (AXIS_OUTER, AXIS_INNER)
+    have_full = ring_full is not None
+    extras = (jnp.asarray(pos, jnp.int32),)
+    if have_full:
+        extras += (jnp.asarray(ring_full, jnp.int32),)
 
-    def local(q, kc, vc):
+    def local(q, kc, vc, *extras_l):
+        pos_l = extras_l[0]
         shard_len = kc.shape[1]
         r = lax.axis_index(AXIS_OUTER) * rt.pc.cp_inner + \
             lax.axis_index(AXIS_INNER)
         start = r * shard_len
-        if ring_full is not None:
-            valid = jnp.clip(ring_full - start, 0, shard_len)
+        if have_full:
+            valid = jnp.clip(extras_l[1] - start, 0, shard_len)
             out, lse = flash_fwd_chunk(q, kc, vc, causal=False,
                                        softcap=softcap, scale=scale,
                                        kv_valid_len=valid, impl="ref")
@@ -241,7 +249,7 @@ def decode_attention(q, k_cache, v_cache, pos, rt: Runtime, *,
             # at ``start`` => band offset pos - start (traced => ref path).
             out, lse = flash_fwd_chunk(q, kc, vc, causal=True, window=window,
                                        softcap=softcap, scale=scale,
-                                       mask_offset=pos - start, impl="ref")
+                                       mask_offset=pos_l - start, impl="ref")
         m = lax.pmax(lse, cp_axes)                       # (b, h, 1)
         m_safe = jnp.where(m <= NEG_INF / 2, 0.0, m)
         wgt = jnp.exp(lse - m_safe)
@@ -256,5 +264,6 @@ def decode_attention(q, k_cache, v_cache, pos, rt: Runtime, *,
     spec_q = P(rt.batch_axes, None, AXIS_HP, None)
     spec_kv = P(rt.batch_axes, (AXIS_OUTER, AXIS_INNER),
                 None if kv_replicated else AXIS_HP, None)
-    return _shard_map(local, rt.mesh, (spec_q, spec_kv, spec_kv),
-                      spec_q)(q, k_cache, v_cache)
+    spec_x = tuple(P(rt.batch_axes) if e.ndim else P() for e in extras)
+    return _shard_map(local, rt.mesh, (spec_q, spec_kv, spec_kv) + spec_x,
+                      spec_q)(q, k_cache, v_cache, *extras)

@@ -13,12 +13,20 @@
 * **SSM decode** is the O(1)-state recurrence (``ssm.mamba*_decode``).
 * Prefill reuses the training forward in *contiguous* (non-zigzag) ring mode
   so collected caches are in natural sequence order.
+* **Paged decode** (``PagedLayout``): full-attention K/V (and the MLA
+  latent) live in fixed-size block pools; ``decode_step`` scatters the new
+  token through per-request block tables and gathers a contiguous view for
+  the flash-decoding combine.  ``pos`` may be a per-request ``(B,)`` vector
+  (ragged continuous batching); sliding-window layers keep their ring
+  buffers (already O(window)) in both modes.  ``prefill_chunk`` is the
+  chunked-prefill building block of the serve engine.
 
 Caches mirror the stacked-params structure so decode scans over layers.
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +47,7 @@ from repro.models.model import (ModelConfig, apply_norm, build_ropes,
                                 lm_head_weight, maybe_scan)
 from repro.models.moe import moe_apply
 from repro.models.ssm import mamba1_decode, mamba2_decode
-from repro.kernels.ops import flash_attention
+from repro.kernels.ops import flash_attention, flash_fwd_chunk
 
 
 # ---------------------------------------------------------------------------
@@ -184,18 +192,93 @@ def cache_shardings(cfg: ModelConfig, caches, mesh, batch_axes=BATCH_AXES):
 
 
 # ---------------------------------------------------------------------------
+# Paged-KV layout: block pools + per-request block tables
+# ---------------------------------------------------------------------------
+
+class PagedLayout(NamedTuple):
+    """How a paged cache pool maps logical positions to physical blocks.
+
+    Pools are ``(num_blocks, page_size, ...)`` (per layer; stacked pools
+    carry a leading layer/group dim).  ``block_tables[b, i]`` is the
+    physical block holding request ``b``'s logical positions
+    ``[i*page_size, (i+1)*page_size)``; tables are shared across layers
+    (every layer's pool uses the same geometry).  Writes for inactive
+    slots (``pos < 0``) are routed out of bounds and dropped, so a shared
+    physical block is never corrupted by a retired request.
+    """
+    block_tables: jax.Array        # (B, max_blocks_per_seq) int32
+    page_size: int                 # static
+    num_blocks: int                # static — pool extent, drop bound
+
+
+def _paged_write(pool, vals, pos, paged: PagedLayout):
+    """Scatter one token per request: pool (NB,Pg,...), vals (B,...),
+    pos scalar/(B,) logical positions (< 0 → dropped)."""
+    b = paged.block_tables.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    blk = jnp.clip(pos // paged.page_size, 0,
+                   paged.block_tables.shape[1] - 1)
+    phys = jnp.take_along_axis(paged.block_tables, blk[:, None],
+                               axis=1)[:, 0]
+    phys = jnp.where(pos >= 0, phys, paged.num_blocks)   # OOB → dropped
+    return pool.at[phys, pos % paged.page_size].set(
+        vals.astype(pool.dtype), mode="drop")
+
+
+def _paged_write_chunk(pool, vals, start, valid, paged: PagedLayout):
+    """Scatter a prefill chunk: vals (B,Lc,...), positions
+    start..start+valid per request (rows ≥ valid dropped)."""
+    b, lc = vals.shape[:2]
+    t = jnp.arange(lc, dtype=jnp.int32)[None]
+    pos = jnp.broadcast_to(jnp.asarray(start, jnp.int32).reshape(-1, 1),
+                           (b, 1)) + t                   # (B, Lc)
+    live = t < jnp.asarray(valid, jnp.int32).reshape(-1, 1)
+    blk = jnp.clip(pos // paged.page_size, 0,
+                   paged.block_tables.shape[1] - 1)
+    phys = jnp.take_along_axis(paged.block_tables, blk, axis=1)
+    phys = jnp.where(live, phys, paged.num_blocks)       # OOB → dropped
+    return pool.at[phys, pos % paged.page_size].set(
+        vals.astype(pool.dtype), mode="drop")
+
+
+def _paged_view(pool, paged: PagedLayout):
+    """(NB,Pg,...) -> (B, max_blocks*Pg, ...) gathered through the block
+    tables — the contiguous view the flash-decoding combine attends."""
+    pages = pool[paged.block_tables]          # (B, MAXB, Pg, ...)
+    b, nb, pg = pages.shape[:3]
+    return pages.reshape((b, nb * pg) + pages.shape[3:])
+
+
+# ---------------------------------------------------------------------------
 # Per-layer decode helpers
 # ---------------------------------------------------------------------------
 
-def _update_cache(cache, new, pos, *, window: int | None):
-    """cache (B,S,H,d), new (B,1,H,d).  Ring-buffered for window layers."""
-    write = pos % cache.shape[1] if window is not None else pos
-    return lax.dynamic_update_slice_in_dim(cache, new.astype(cache.dtype),
-                                           write, axis=1)
+def _ring_pos_write(cache, new, write):
+    """cache (B,S,...), new (B,1,...), write scalar/(B,) slot indices."""
+    new = new.astype(cache.dtype)
+    write = jnp.asarray(write, jnp.int32)
+    if write.ndim:
+        return jax.vmap(
+            lambda c, n, p: lax.dynamic_update_slice_in_dim(c, n, p, axis=0)
+        )(cache, new, jnp.maximum(write, 0))
+    return lax.dynamic_update_slice_in_dim(cache, new, write, axis=1)
+
+
+def _update_cache(cache, new, pos, *, window: int | None,
+                  paged: PagedLayout | None = None):
+    """cache (B,S,H,d) contiguous / (B,W,H,d) ring / (NB,Pg,H,d) paged
+    pool; new (B,1,H,d); pos scalar or per-request (B,).  Ring-buffered
+    for window layers (both modes — windows are already O(window))."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if window is not None:
+        return _ring_pos_write(cache, new, pos % cache.shape[1])
+    if paged is not None:
+        return _paged_write(cache, new[:, 0], pos, paged)
+    return _ring_pos_write(cache, new, pos)
 
 
 def _gqa_decode(p, x, cache, pos, rt, cfg: ModelConfig, kind: AttnKind,
-                ropes):
+                ropes, paged: PagedLayout | None = None):
     b = x.shape[0]
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     q = linear_apply(p["wq"], x).reshape(b, 1, h, hd)
@@ -208,8 +291,11 @@ def _gqa_decode(p, x, cache, pos, rt, cfg: ModelConfig, kind: AttnKind,
         cos, sin = ropes[kind.rope_theta]
         q = apply_rotary(q, cos, sin)
         k = apply_rotary(k, cos, sin)
-    k_cache = _update_cache(cache["k"], k, pos, window=kind.window)
-    v_cache = _update_cache(cache["v"], v, pos, window=kind.window)
+    use_paged = paged if kind.window is None else None
+    k_cache = _update_cache(cache["k"], k, pos, window=kind.window,
+                            paged=use_paged)
+    v_cache = _update_cache(cache["v"], v, pos, window=kind.window,
+                            paged=use_paged)
     if kind.window is not None:
         # Ring buffer: every live slot is inside the window — plain valid-
         # length masking, handled as full attention over min(pos+1, W) keys.
@@ -219,13 +305,16 @@ def _gqa_decode(p, x, cache, pos, rt, cfg: ModelConfig, kind: AttnKind,
                                ring_full=jnp.minimum(pos + 1,
                                                      k_cache.shape[1]))
     else:
-        out = decode_attention(q, k_cache, v_cache, pos, rt,
+        k_att = _paged_view(k_cache, paged) if use_paged else k_cache
+        v_att = _paged_view(v_cache, paged) if use_paged else v_cache
+        out = decode_attention(q, k_att, v_att, pos, rt,
                                softcap=kind.softcap)
     y = linear_apply(p["wo"], out.reshape(b, 1, h * hd))
     return y, {"k": k_cache, "v": v_cache}
 
 
-def _mla_decode(p, x, cache, pos, rt, cfg: ModelConfig, ropes):
+def _mla_decode(p, x, cache, pos, rt, cfg: ModelConfig, ropes,
+                paged: PagedLayout | None = None):
     m = cfg.mla
     b = x.shape[0]
     cos, sin = ropes[cfg.rope_theta]
@@ -237,10 +326,11 @@ def _mla_decode(p, x, cache, pos, rt, cfg: ModelConfig, ropes):
     c_t = rmsnorm_apply(p["kv_norm"], ckv[..., :m.kv_lora])
     kr_t = apply_rotary(ckv[..., None, m.kv_lora:], cos, sin)[:, :, 0]
 
-    c_cache = lax.dynamic_update_slice_in_dim(
-        cache["c"], c_t.astype(cache["c"].dtype), pos, axis=1)
-    r_cache = lax.dynamic_update_slice_in_dim(
-        cache["rope"], kr_t.astype(cache["rope"].dtype), pos, axis=1)
+    c_cache = _update_cache(cache["c"], c_t, pos, window=None, paged=paged)
+    r_cache = _update_cache(cache["rope"], kr_t, pos, window=None,
+                            paged=paged)
+    c_att = _paged_view(c_cache, paged) if paged is not None else c_cache
+    r_att = _paged_view(r_cache, paged) if paged is not None else r_cache
 
     # Absorbed attention in latent space (MQA over one 576-dim head).
     w_up = p["kv_up"]["w"].reshape(m.kv_lora, m.n_heads, m.d_nope + m.d_v)
@@ -248,8 +338,8 @@ def _mla_decode(p, x, cache, pos, rt, cfg: ModelConfig, ropes):
     w_uv = w_up[..., m.d_nope:]                       # (lora, H, d_v)
     q_lat = jnp.einsum("bthn,lhn->bthl", q_nope, w_uk.astype(q_nope.dtype))
     q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)  # (B,1,H,lora+rope)
-    k_eff = jnp.concatenate([c_cache, r_cache], axis=-1)[:, :, None]
-    v_eff = jnp.pad(c_cache[:, :, None],
+    k_eff = jnp.concatenate([c_att, r_att], axis=-1)[:, :, None]
+    v_eff = jnp.pad(c_att[:, :, None],
                     ((0, 0), (0, 0), (0, 0), (0, m.d_rope)))
     out = decode_attention(q_eff, k_eff, v_eff, pos, rt,
                            scale=1.0 / (m.d_qk ** 0.5), kv_replicated=True)
@@ -280,12 +370,21 @@ def _cross_decode(p, x, cache, rt, cfg: ModelConfig):
 # Decode step (one new token)
 # ---------------------------------------------------------------------------
 
-def decode_step(params, caches, tokens, pos, rt: Runtime, cfg: ModelConfig):
-    """tokens: (B, 1) int32; pos: scalar int32.  -> (logits, new_caches)."""
+def decode_step(params, caches, tokens, pos, rt: Runtime, cfg: ModelConfig,
+                paged: PagedLayout | None = None):
+    """tokens: (B, 1) int32; pos: scalar int32 or per-request (B,) int32
+    (ragged continuous batching — entries of -1 mark inactive slots).
+    ``paged``: when given, full-attention K/V (and MLA latent) caches are
+    block pools gathered through per-request block tables (dense/moe
+    families).  -> (logits, new_caches)."""
     b = tokens.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    assert paged is None or cfg.family in ("dense", "moe"), cfg.family
     params = cast_params_once(params, cfg)
     x = embed_tokens(params, tokens, cfg)
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    positions = pos[:, None] if pos.ndim else jnp.full((b, 1), pos,
+                                                       jnp.int32)
+    positions = jnp.maximum(positions, 0)     # inactive slots: dummy rope
     ropes = build_ropes(cfg, positions) if cfg.rope else {}
     new_caches = {}
 
@@ -297,7 +396,7 @@ def decode_step(params, caches, tokens, pos, rt: Runtime, cfg: ModelConfig):
                 lp, cache = xs
                 h = apply_norm(cfg, lp["ln1"], x)
                 h, cache = _mla_decode(lp["attn"], h, cache, pos, rt, cfg,
-                                       ropes)
+                                       ropes, paged=paged)
                 x = x + h
                 h = apply_norm(cfg, lp["ln2"], x)
                 if cfg.family == "moe":
@@ -320,7 +419,8 @@ def decode_step(params, caches, tokens, pos, rt: Runtime, cfg: ModelConfig):
                     h = apply_norm(cfg, lp["ln1"], x)
                     h, cache = _gqa_decode(lp["attn"], x=h, cache=cache,
                                            pos=pos, rt=rt, cfg=cfg,
-                                           kind=kinds[slot], ropes=ropes)
+                                           kind=kinds[slot], ropes=ropes,
+                                           paged=paged)
                     if cfg.post_norms:
                         h = apply_norm(cfg, lp["pn1"], h)
                     x = x + h
@@ -608,3 +708,163 @@ def prefill(params, batch, rt: Runtime, cfg: ModelConfig):
     logits = jax.lax.with_sharding_constraint(
         logits, NamedSharding(rt.mesh, P(BATCH_AXES, None, MODEL_AXES)))
     return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill against a paged cache (serve-engine building block)
+# ---------------------------------------------------------------------------
+
+def prefill_chunk(params, caches, tokens, start, valid, rt: Runtime,
+                  cfg: ModelConfig, paged: PagedLayout):
+    """One prefill chunk against the paged cache (dense/moe families).
+
+    tokens (B, Lc) int32 — a bucketed chunk (rows ≥ ``valid`` are padding);
+    start scalar/(B,) int32 — logical position of ``tokens[:, 0]``;
+    valid scalar/(B,) int32 — real tokens in this chunk (≤ Lc).
+
+    Full-attention layers write the chunk's K/V through the block tables,
+    then attend the gathered pages with a ``start``-anchored causal band
+    capped at ``start + valid`` visible keys.  Sliding-window layers
+    require single-chunk prefill (``start == 0`` covering the whole
+    prompt): chunk-local banded attention is exact there, and the ring
+    buffer is seeded with the last ``min(window, valid)`` positions.  MLA
+    runs absorbed against the gathered latent pages.  Masks are ragged
+    (per-request offsets) => ref attention path.
+
+    Returns (logits of token ``valid - 1`` per request (B, 1, V),
+    new_caches).
+    """
+    assert cfg.family in ("dense", "moe"), cfg.family
+    b, lc = tokens.shape
+    params = cast_params_once(params, cfg)
+    x = embed_tokens(params, tokens, cfg)
+    start = jnp.asarray(start, jnp.int32)
+    valid = jnp.asarray(valid, jnp.int32)
+    start_c = start.reshape(-1, 1)
+    valid_c = valid.reshape(-1, 1)
+    positions = jnp.broadcast_to(
+        jnp.maximum(start_c + jnp.arange(lc, dtype=jnp.int32)[None], 0),
+        (b, lc))
+    ropes = build_ropes(cfg, positions) if cfg.rope else {}
+    period = cfg.period
+    kinds = [cfg.attn_kind(i) for i in range(period)]
+
+    from repro.models.attention_block import _project_qkv
+
+    def gqa_chunk(p, h, cache, kind: AttnKind):
+        cos, sin = ropes.get(kind.rope_theta, (None, None))
+        q, k, v = _project_qkv(p, h, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                               cos, sin, kind, qk_norm=cfg.qk_norm)
+        if kind.window is not None:
+            w = kind.window
+            out, _ = flash_fwd_chunk(q, k, v, causal=True, window=w,
+                                     softcap=kind.softcap,
+                                     kv_valid_len=valid, impl="ref")
+            # Seed the ring buffer with the last min(w, valid) positions —
+            # each lands in its decode slot ``pos % w``; the rest (and the
+            # padded rows) are routed out of bounds and dropped.
+            t = jnp.arange(lc, dtype=jnp.int32)[None]
+            keep = (t < valid_c) & (t >= valid_c - w)
+            slot = jnp.where(keep, t % w, w)
+            bidx = jnp.arange(b)[:, None]
+            kc = cache["k"].at[bidx, slot].set(
+                k.astype(cache["k"].dtype), mode="drop")
+            vc = cache["v"].at[bidx, slot].set(
+                v.astype(cache["v"].dtype), mode="drop")
+        else:
+            kc = _paged_write_chunk(cache["k"], k, start, valid, paged)
+            vc = _paged_write_chunk(cache["v"], v, start, valid, paged)
+            out, _ = flash_fwd_chunk(q, _paged_view(kc, paged),
+                                     _paged_view(vc, paged), causal=True,
+                                     softcap=kind.softcap,
+                                     mask_offset=start,
+                                     kv_valid_len=start + valid,
+                                     impl="ref")
+        y = linear_apply(p["wo"], out.reshape(b, lc, cfg.n_heads * cfg.hd))
+        return y, {"k": kc, "v": vc}
+
+    def mla_chunk(p, h, cache):
+        m = cfg.mla
+        cos, sin = ropes[cfg.rope_theta]
+        q = linear_apply(p["wq"], h).reshape(b, lc, m.n_heads, m.d_qk)
+        q_nope, q_rope = q[..., :m.d_nope], q[..., m.d_nope:]
+        q_rope = apply_rotary(q_rope, cos, sin)
+        ckv = linear_apply(p["kv_down"], h)
+        c_t = rmsnorm_apply(p["kv_norm"], ckv[..., :m.kv_lora])
+        kr_t = apply_rotary(ckv[..., None, m.kv_lora:], cos, sin)[:, :, 0]
+        cc = _paged_write_chunk(cache["c"], c_t, start, valid, paged)
+        rc = _paged_write_chunk(cache["rope"], kr_t, start, valid, paged)
+        c_att = _paged_view(cc, paged)
+        r_att = _paged_view(rc, paged)
+        w_up = p["kv_up"]["w"].reshape(m.kv_lora, m.n_heads,
+                                       m.d_nope + m.d_v)
+        q_lat = jnp.einsum("bthn,lhn->bthl", q_nope,
+                           w_up[..., :m.d_nope].astype(q_nope.dtype))
+        q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)
+        k_eff = jnp.concatenate([c_att, r_att], axis=-1)[:, :, None]
+        v_eff = jnp.pad(c_att[:, :, None],
+                        ((0, 0), (0, 0), (0, 0), (0, m.d_rope)))
+        out, _ = flash_fwd_chunk(q_eff, k_eff, v_eff, causal=True,
+                                 scale=1.0 / (m.d_qk ** 0.5),
+                                 mask_offset=start,
+                                 kv_valid_len=start + valid, impl="ref")
+        out_lat = out[..., :m.kv_lora]
+        o = jnp.einsum("bthl,lhv->bthv", out_lat,
+                       w_up[..., m.d_nope:].astype(out_lat.dtype))
+        return linear_apply(p["wo"], o.reshape(b, lc, m.n_heads * m.d_v)), \
+            {"c": cc, "rope": rc}
+
+    if cfg.mla is not None:
+        def body(x, xs):
+            lp, cache = xs
+            h = apply_norm(cfg, lp["ln1"], x)
+            h, cache = mla_chunk(lp["attn"], h, cache)
+            x = x + h
+            h = apply_norm(cfg, lp["ln2"], x)
+            if cfg.family == "moe":
+                h, _ = moe_apply(lp["moe"], h, rt, cfg.moe,
+                                 seq_sharded=False)
+            else:
+                h = glu_mlp_apply(lp["mlp"], h, act=cfg.act)
+            return x + h, cache
+
+        x, ncache = maybe_scan(body, x, (params["blocks"][0],
+                                         caches["blocks"][0]),
+                               cfg.unroll_loops)
+        new_caches = {"blocks": [ncache]}
+    else:
+        def body(x, xs):
+            lps, slot_caches = xs
+            new_slots = []
+            for slot in range(period):
+                lp, cache = lps[slot], slot_caches[slot]
+                h = apply_norm(cfg, lp["ln1"], x)
+                h, cache = gqa_chunk(lp["attn"], h, cache, kinds[slot])
+                if cfg.post_norms:
+                    h = apply_norm(cfg, lp["pn1"], h)
+                x = x + h
+                h = apply_norm(cfg, lp["ln2"], x)
+                if cfg.family == "moe":
+                    h, _ = moe_apply(lp["moe"], h, rt, cfg.moe,
+                                     seq_sharded=False)
+                else:
+                    h = glu_mlp_apply(lp["mlp"], h, act=cfg.act)
+                if cfg.post_norms:
+                    h = apply_norm(cfg, lp["pn2"], h)
+                x = x + h
+                new_slots.append(cache)
+            return x, new_slots
+
+        x, ncaches = maybe_scan(body, x, (params["blocks"],
+                                          caches["blocks"]),
+                                cfg.unroll_loops)
+        new_caches = {"blocks": ncaches}
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    idx = jnp.clip(jnp.broadcast_to(valid.reshape(-1), (b,)) - 1, 0, lc - 1)
+    x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    w = lm_head_weight(params, cfg)
+    logits = (x_last @ w.astype(x_last.dtype)).astype(jnp.float32)
+    logits = jax.lax.with_sharding_constraint(
+        logits, NamedSharding(rt.mesh, P(rt.batch_axes, None, MODEL_AXES)))
+    return logits, new_caches

@@ -1,0 +1,21 @@
+"""Continuous-batching paged-KV serving engine.
+
+The serving pillar next to training: a paged KV cache (fixed-size blocks,
+free-list allocator, per-request block tables — ``paged_cache``), a
+batched sampler (``sampling``), a request scheduler with admission /
+eviction and chunked prefill (``scheduler``), and the engine that drives
+jitted prefill-chunk / decode steps at bucketed shapes so new requests
+join mid-stream without recompilation (``engine``).
+"""
+from repro.serve.engine import EngineConfig, ServeEngine
+from repro.serve.paged_cache import (BlockAllocator, blocks_needed,
+                                     init_paged_caches,
+                                     paged_cache_shardings, window_flags)
+from repro.serve.sampling import SamplingParams, sample_tokens
+from repro.serve.scheduler import Request, Scheduler
+
+__all__ = [
+    "BlockAllocator", "EngineConfig", "Request", "SamplingParams",
+    "Scheduler", "ServeEngine", "blocks_needed", "init_paged_caches",
+    "paged_cache_shardings", "sample_tokens", "window_flags",
+]

@@ -1,0 +1,397 @@
+"""The continuous-batching serve engine.
+
+One engine step interleaves (a) admission of waiting requests into free
+slots, (b) one chunked-prefill call for the oldest admitted request, and
+(c) one fused decode+sample step over every in-flight sequence — so a
+long prompt never stalls the decode batch, and finished sequences retire
+in-place for the next waiting request.
+
+Shapes are bucketed: decode always runs at ``(max_batch, 1)`` with
+inactive slots masked by ``lengths == -1``, prefill chunks are padded to
+a power-of-two ladder, and caches are pre-sized to each request's
+``prompt + max_new_tokens`` worst case at admission (block reservation) —
+so after warmup **no jitted function ever retraces** (asserted by the
+``decode_traces`` / ``prefill_traces`` counters, see tests).
+
+The decode hot loop is sync-free: sampling is fused into the decode jit,
+all per-slot state (lengths, last tokens, sampling params, PRNG streams,
+output buffer, block tables) lives on device, and generated tokens are
+fetched only when a request retires — one dispatch per token batch, no
+per-step host↔device traffic (unless a request asked for EOS detection,
+which needs the token values each step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.decode import PagedLayout, decode_step, prefill_chunk
+from repro.serve.paged_cache import (BlockAllocator, init_paged_caches,
+                                     paged_cache_shardings, window_flags)
+from repro.serve.sampling import SamplingParams, request_key, sample_tokens
+from repro.serve.scheduler import DECODE, Request, Scheduler
+
+MIN_BUCKET = 16
+
+
+def _pow2(n: int, lo: int, hi: int | None = None) -> int:
+    """Smallest power-of-two ≥ n, floored at lo, optionally capped at hi.
+    The single bucket ladder shared by prefill chunks, decode views and
+    warmup — one definition so jit cache keys can never drift apart."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b if hi is None else min(b, hi)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Standalone engine geometry (``plan.serve_spec()`` derives one from
+    the memory model; tests construct it directly)."""
+    page_size: int = 16
+    num_blocks: int = 64
+    max_blocks_per_seq: int = 16
+    max_batch: int = 4
+    prefill_chunk: int = 64
+
+
+class ServeEngine:
+    """Continuous-batching engine over an ExecutionPlan + params.
+
+    ``submit()`` enqueues prompts; ``step()`` advances the world by one
+    scheduler tick; ``run()`` drains everything and returns per-request
+    outputs with latency stats.  Dense/moe families (GQA full/sliding-
+    window attention and absorbed MLA).
+    """
+
+    #: output-buffer width: requests may generate at most this many tokens
+    MAX_NEW_CAP = 1024
+
+    def __init__(self, plan, params, spec=None):
+        self.plan, self.params = plan, params
+        self.cfg, self.rt = plan.cfg, plan.rt
+        assert self.cfg.family in ("dense", "moe"), self.cfg.family
+        spec = spec or plan.serve_spec()
+        assert spec is not None, "plan has no serve spec for this family"
+        self.spec = spec
+
+        pools = init_paged_caches(self.cfg, num_blocks=spec.num_blocks,
+                                  page_size=spec.page_size,
+                                  max_batch=spec.max_batch)
+        sh = paged_cache_shardings(self.cfg, pools, plan.mesh)
+        self._flags = window_flags(self.cfg, pools)
+        self.has_window = any(jax.tree.leaves(self._flags))
+
+        self.alloc = BlockAllocator(spec.num_blocks)
+        self.sched = Scheduler(spec.max_batch, self.alloc, spec.page_size,
+                               spec.max_blocks_per_seq)
+
+        b = spec.max_batch
+        # Device-resident per-slot state — the decode loop never reads it
+        # back; slices are updated at admission/prefill boundaries only.
+        self.st = {
+            "pools": jax.device_put(pools, sh),
+            "btabs": jnp.zeros((b, spec.max_blocks_per_seq), jnp.int32),
+            "lengths": jnp.full((b,), -1, jnp.int32),
+            "last": jnp.zeros((b,), jnp.int32),
+            "steps": jnp.zeros((b,), jnp.int32),
+            "out": jnp.zeros((b, self.MAX_NEW_CAP), jnp.int32),
+            "temps": jnp.zeros((b,), jnp.float32),
+            "top_ks": jnp.zeros((b,), jnp.int32),
+            "top_ps": jnp.ones((b,), jnp.float32),
+            "keys": jnp.zeros((b, 2), jnp.uint32),
+        }
+
+        self.requests: dict[int, Request] = {}
+        self._decoding: list[Request] = []      # hot-loop mirror of DECODE
+        self._next_rid = 0
+        self.decode_traces = 0
+        self.prefill_traces: dict[int, int] = {}
+        self._prefill_jits: dict[int, object] = {}
+
+        cfg, rt = self.cfg, self.rt
+        page, nb, cap = spec.page_size, spec.num_blocks, self.MAX_NEW_CAP
+
+        def _fused(st, nbv: int, do_sample: bool):
+            """decode_step + sampling + bookkeeping, one dispatch.
+            Serving weights are stationary: ``params`` is closed over, so
+            the hot loop never re-flattens the parameter pytree.  ``nbv``
+            (static) is the view bucket: only the first ``nbv`` block-table
+            columns are gathered, so attention compute follows the longest
+            *active* sequence instead of the worst case — the fixed-batch
+            baseline cannot do this without re-tracing.  ``do_sample``
+            (static) skips the sort/softmax filter stack entirely when
+            every in-flight request is greedy (the engine checks per
+            step), leaving a bare argmax in the hot loop."""
+            self.decode_traces += 1
+            active = st["lengths"] >= 0
+            paged = PagedLayout(st["btabs"][:, :nbv], page, nb)
+            logits, pools = decode_step(params, st["pools"],
+                                        st["last"][:, None], st["lengths"],
+                                        rt, cfg, paged)
+            if do_sample:
+                toks = sample_tokens(logits[:, 0], st["temps"],
+                                     st["top_ks"], st["top_ps"],
+                                     st["keys"], st["steps"])
+            else:
+                toks = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+            toks = jnp.where(active, toks, st["last"])
+            slot_i = jnp.arange(toks.shape[0])
+            out = st["out"].at[
+                slot_i, jnp.where(active, st["steps"], cap)].set(
+                toks, mode="drop")
+            inc = active.astype(jnp.int32)
+            return {**st, "pools": pools, "last": toks, "out": out,
+                    "lengths": st["lengths"] + inc,
+                    "steps": st["steps"] + inc}
+
+        def _start(st, logits, slot, plen):
+            """First generated token after the last prefill chunk."""
+            sl1 = lambda a: lax.dynamic_slice_in_dim(a, slot, 1)  # noqa
+            tok = sample_tokens(logits, sl1(st["temps"]),
+                                sl1(st["top_ks"]), sl1(st["top_ps"]),
+                                lax.dynamic_slice_in_dim(st["keys"], slot,
+                                                         1),
+                                sl1(st["steps"]))
+            return {**st,
+                    "last": st["last"].at[slot].set(tok[0]),
+                    "out": st["out"].at[slot, 0].set(tok[0]),
+                    "lengths": st["lengths"].at[slot].set(plen),
+                    "steps": st["steps"].at[slot].set(1)}
+
+        self._fused = jax.jit(_fused, donate_argnums=(0,),
+                              static_argnums=(1, 2))
+        self._start = jax.jit(_start, donate_argnums=(0,))
+
+    # -- request intake -----------------------------------------------------
+
+    def submit(self, prompt, sampling: SamplingParams | None = None,
+               max_new_tokens: int = 16, eos_id: int | None = None) -> int:
+        assert max_new_tokens <= self.MAX_NEW_CAP, max_new_tokens
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid,
+                      prompt=np.asarray(prompt, np.int32).reshape(-1),
+                      sampling=sampling or SamplingParams(),
+                      max_new_tokens=int(max_new_tokens), eos_id=eos_id)
+        req.t_submit = time.perf_counter()
+        self.sched.submit(req)
+        self.requests[rid] = req
+        return rid
+
+    # -- jitted prefill per bucket -------------------------------------------
+
+    def _bucket(self, n: int) -> int:
+        return _pow2(n, MIN_BUCKET)
+
+    def _prefill_fn(self, lc: int, nbv: int):
+        key = (lc, nbv)
+        if key in self._prefill_jits:
+            return self._prefill_jits[key]
+        cfg, rt, flags = self.cfg, self.rt, self._flags
+        page, nb = self.spec.page_size, self.spec.num_blocks
+
+        params = self.params
+
+        def _pf(st, tokens, start, valid, slot):
+            self.prefill_traces[key] = self.prefill_traces.get(key, 0) + 1
+            # Ring-buffer (window) leaves carry a max_batch dim: slice this
+            # request's row, prefill at B=1, splice back.  Paged pools are
+            # shared and flow through whole; the gathered view is bucketed
+            # to the first ``nbv`` block-table columns (enough for
+            # ``start + valid``), so chunk attention never pays for the
+            # worst-case sequence extent.
+            pools = st["pools"]
+            local = jax.tree.map(
+                lambda leaf, w: lax.dynamic_slice_in_dim(leaf, slot, 1,
+                                                         axis=1)
+                if w else leaf, pools, flags)
+            btab_row = lax.dynamic_slice_in_dim(st["btabs"], slot, 1)
+            paged = PagedLayout(btab_row[:, :nbv], page, nb)
+            logits, new_local = prefill_chunk(params, local, tokens[None],
+                                              start, valid, rt, cfg, paged)
+            merged = jax.tree.map(
+                lambda old, new, w: lax.dynamic_update_slice_in_dim(
+                    old, new, slot, axis=1) if w else new,
+                pools, new_local, flags)
+            return logits[:, 0], {**st, "pools": merged}
+
+        f = jax.jit(_pf, donate_argnums=(0,))
+        self._prefill_jits[key] = f
+        return f
+
+    def warmup(self, prompt_lens=(), max_new: int = 2) -> None:
+        """Compile every decode view bucket (both the greedy and the
+        sampling variant) and the prefill buckets the given prompt
+        lengths hit, so a latency-sensitive caller pays tracing before
+        opening the doors."""
+        nbv = 4
+        while True:
+            nbv = _pow2(nbv, 4, self.spec.max_blocks_per_seq)
+            # no active slot: a fused call is a harmless no-op compile
+            self.st = self._fused(self.st, nbv, False)
+            self.st = self._fused(self.st, nbv, True)
+            if nbv >= self.spec.max_blocks_per_seq:
+                break
+            nbv *= 2
+        lens = sorted({self._bucket(n) for n in prompt_lens} or
+                      {MIN_BUCKET})
+        rng = np.random.default_rng(0)
+        for n in lens:
+            self.submit(rng.integers(0, self.cfg.vocab, size=n),
+                        SamplingParams(), max_new_tokens=max_new)
+        self.run()
+        self.requests.clear()
+
+    # -- one scheduler tick --------------------------------------------------
+
+    def step(self) -> list[Request]:
+        """Admit → one prefill chunk → one fused decode step.  Returns
+        the requests that finished during this tick."""
+        finished: list[Request] = []
+        if self.sched.waiting:
+            for req in self.sched.admit():
+                self._on_admit(req)
+        pf = self.sched.next_prefill()
+        if pf is not None:
+            done = self._prefill_step(pf)
+            if done is not None:
+                finished.append(done)
+        if self._decoding:
+            finished.extend(self._decode_step_all())
+        return finished
+
+    def _on_admit(self, req: Request) -> None:
+        s, st = req.slot, self.st
+        row = np.zeros((self.spec.max_blocks_per_seq,), np.int32)
+        row[:len(req.blocks)] = req.blocks
+        sp = req.sampling
+        st["btabs"] = st["btabs"].at[s].set(jnp.asarray(row))
+        st["lengths"] = st["lengths"].at[s].set(-1)
+        st["steps"] = st["steps"].at[s].set(0)
+        st["temps"] = st["temps"].at[s].set(sp.temperature)
+        st["top_ks"] = st["top_ks"].at[s].set(sp.top_k)
+        st["top_ps"] = st["top_ps"].at[s].set(sp.top_p)
+        st["keys"] = st["keys"].at[s].set(request_key(sp, req.rid))
+
+    def _prefill_step(self, req: Request) -> Request | None:
+        s = req.slot
+        remaining = req.prompt_len - req.prefilled
+        if self.has_window:
+            # Sliding-window layers: chunk-local banded attention is exact
+            # only when the chunk covers the whole prompt (see
+            # models/decode.py::prefill_chunk).
+            assert req.prefilled == 0
+            chunk = remaining
+        else:
+            chunk = min(self.spec.prefill_chunk, remaining)
+        lc = self._bucket(chunk)
+        need_blocks = -(-(req.prefilled + chunk) // self.spec.page_size)
+        nbv = _pow2(need_blocks, 4, self.spec.max_blocks_per_seq)
+        tokens = np.zeros((lc,), np.int32)
+        tokens[:chunk] = req.prompt[req.prefilled:req.prefilled + chunk]
+        logits, self.st = self._prefill_fn(lc, nbv)(
+            self.st, jnp.asarray(tokens),
+            jnp.int32(req.prefilled), jnp.int32(chunk), jnp.int32(s))
+        req.prefilled += chunk
+        if req.prefilled < req.prompt_len:
+            return None
+        # Prompt complete: its last logits seed the first generated token.
+        self.st = self._start(self.st, logits, jnp.int32(s),
+                              jnp.int32(req.prompt_len))
+        req.t_first = time.perf_counter()
+        req.state = DECODE
+        req.out_tokens = [None]          # host mirror: count only
+        self._decoding.append(req)
+        if req.eos_id is not None and \
+                int(np.asarray(self.st["last"][s])) == req.eos_id:
+            return self._retire(req, s)  # EOS as the very first token
+        if self._done(req):
+            return self._retire(req, s)
+        return None
+
+    def _view_bucket(self) -> int:
+        """Smallest power-of-two block count covering every active
+        sequence's next write position."""
+        need = max(r.prompt_len + len(r.out_tokens) for r in self._decoding)
+        need_blocks = -(-(need + 1) // self.spec.page_size)
+        return _pow2(need_blocks, 4, self.spec.max_blocks_per_seq)
+
+    def _decode_step_all(self) -> list[Request]:
+        do_sample = any(r.sampling.temperature > 0 for r in self._decoding)
+        self.st = self._fused(self.st, self._view_bucket(), do_sample)
+        eos_toks = None
+        if any(r.eos_id is not None for r in self._decoding):
+            eos_toks = np.asarray(self.st["last"])     # forces a sync
+        finished = []
+        for req in list(self._decoding):
+            s = req.slot
+            req.out_tokens.append(None)
+            if eos_toks is not None and req.eos_id is not None and \
+                    int(eos_toks[s]) == req.eos_id:
+                finished.append(self._retire(req, s))
+            elif self._done(req):
+                finished.append(self._retire(req, s))
+        return finished
+
+    def _done(self, req: Request) -> bool:
+        return len(req.out_tokens) >= req.max_new_tokens
+
+    def evict(self, rid: int) -> None:
+        """Demote a running request back to the waiting-queue head: pages
+        released, progress reset, slot masked out of the decode batch.
+        The engine-level pressure valve — use this, not
+        ``sched.evict()`` directly, so the device state and the hot-loop
+        mirror stay in sync with the scheduler."""
+        req = self.requests[rid]
+        slot = req.slot
+        self.sched.evict(req)
+        if req in self._decoding:
+            self._decoding.remove(req)
+        req.out_tokens = []
+        if slot >= 0:
+            self.st["lengths"] = self.st["lengths"].at[slot].set(-1)
+
+    def _retire(self, req: Request, slot: int) -> Request:
+        n = len(req.out_tokens)
+        req.out_tokens = [int(t) for t in
+                          np.asarray(self.st["out"][slot, :n])]
+        req.t_done = time.perf_counter()
+        self.sched.retire(req)
+        if req in self._decoding:
+            self._decoding.remove(req)
+        self.st["lengths"] = self.st["lengths"].at[slot].set(-1)
+        return req
+
+    # -- drain ---------------------------------------------------------------
+
+    def run(self, max_steps: int = 100_000) -> dict:
+        """Drain all submitted requests.  Returns
+        ``{"requests": {rid: {...}}, "wall_s", "generated",
+        "tokens_per_s"}`` covering exactly the requests that finished
+        during *this* call (an engine serves many batches; earlier runs'
+        outputs never leak into later stats) — latency is submit→done
+        (queueing included: that is the continuous-batching headline)."""
+        t0 = time.perf_counter()
+        steps = 0
+        drained: list[Request] = []
+        while not self.sched.idle():
+            drained.extend(self.step())
+            steps += 1
+            if steps >= max_steps:
+                raise RuntimeError(f"engine did not drain in {steps} steps")
+        wall = time.perf_counter() - t0
+        out, generated = {}, 0
+        for req in drained:
+            generated += len(req.out_tokens)
+            out[req.rid] = {"tokens": list(req.out_tokens),
+                            "latency_s": req.t_done - req.t_submit,
+                            "first_token_s": req.t_first - req.t_submit}
+        return {"requests": out, "wall_s": wall, "generated": generated,
+                "engine_steps": steps,
+                "tokens_per_s": generated / max(wall, 1e-9)}

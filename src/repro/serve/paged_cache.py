@@ -1,0 +1,133 @@
+"""Paged KV-cache pools + the host-side free-list block allocator.
+
+Full-attention K/V (and the MLA latent) live in fixed-size block pools
+``(layers, num_blocks, page_size, ...)`` shared by every request; a
+request owns an ordered list of physical blocks recorded in its block
+table row.  Sliding-window layers keep per-slot ring buffers
+``(layers, max_batch, window, ...)`` — they are already O(window) and a
+ring write composes with paging for free (see ``models/decode.py``).
+
+Sharding mirrors the contiguous ``kv_cache_spec`` layout: the S-carrying
+block axis is sharded over the context axes ``(outer, inner)`` (each
+context rank owns a subset of physical pages) and KV heads over ``head``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.topology import AXIS_HP, AXIS_INNER, AXIS_OUTER
+
+
+def blocks_needed(n_tokens: int, page_size: int) -> int:
+    return -(-n_tokens // page_size)
+
+
+def paged_kv_spec() -> P:
+    """PartitionSpec of a (layers, num_blocks, page, H, d) block pool."""
+    return P(None, (AXIS_OUTER, AXIS_INNER), None, AXIS_HP, None)
+
+
+def paged_latent_spec() -> P:
+    """PartitionSpec of a (layers, num_blocks, page, dim) MLA latent pool."""
+    return P(None, (AXIS_OUTER, AXIS_INNER), None, None)
+
+
+def window_ring_spec(batch_axes=()) -> P:
+    """PartitionSpec of a (layers, max_batch, window, H, d) ring buffer."""
+    return P(None, batch_axes, (AXIS_OUTER, AXIS_INNER), AXIS_HP, None)
+
+
+def init_paged_caches(cfg, *, num_blocks: int, page_size: int,
+                      max_batch: int):
+    """Zero block pools mirroring ``init_caches``'s stacked structure so
+    ``decode_step``/``prefill_chunk`` scan over layers unchanged.
+    Dense/moe families only (the engine's scope)."""
+    assert cfg.family in ("dense", "moe"), cfg.family
+    dt = cfg.compute_dtype
+    if cfg.mla is not None:
+        m = cfg.mla
+        n = cfg.num_layers
+        return {"blocks": [{
+            "c": jnp.zeros((n, num_blocks, page_size, m.kv_lora), dt),
+            "rope": jnp.zeros((n, num_blocks, page_size, m.d_rope), dt)}]}
+    period = cfg.period
+    groups = cfg.num_layers // period
+    caches = []
+    for slot in range(period):
+        kind = cfg.attn_kind(slot)
+        if kind.window is not None:
+            shp = (groups, max_batch, kind.window, cfg.n_kv_heads, cfg.hd)
+        else:
+            shp = (groups, num_blocks, page_size, cfg.n_kv_heads, cfg.hd)
+        caches.append({"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt)})
+    return {"blocks": caches}
+
+
+def window_flags(cfg, caches):
+    """Pytree of bools matching ``init_paged_caches`` output: True for
+    per-slot ring-buffer leaves (which carry a max_batch dim the engine
+    must slice per request during prefill)."""
+    def flag(slot_cache, is_window: bool):
+        return jax.tree.map(lambda _: is_window, slot_cache)
+
+    if cfg.mla is not None:
+        return {"blocks": [flag(caches["blocks"][0], False)]}
+    return {"blocks": [
+        flag(c, cfg.attn_kind(slot).window is not None)
+        for slot, c in enumerate(caches["blocks"])]}
+
+
+def paged_cache_shardings(cfg, caches, mesh, batch_axes=()):
+    """NamedSharding pytree matching ``init_paged_caches`` output."""
+    flags = window_flags(cfg, caches)
+
+    def spec_for(leaf, is_window: bool):
+        if is_window:
+            return window_ring_spec(batch_axes)
+        if leaf.ndim == 5:
+            return paged_kv_spec()
+        return paged_latent_spec()
+
+    return jax.tree.map(
+        lambda leaf, w: NamedSharding(mesh, spec_for(leaf, w)),
+        caches, flags)
+
+
+class BlockAllocator:
+    """Host-side free-list allocator over the physical block pool.
+
+    Blocks are plain ints < num_blocks.  ``alloc`` is all-or-nothing (a
+    request's worst-case footprint is reserved at admission, so the
+    scheduler never deadlocks mid-stream); ``free`` returns a retired
+    request's blocks.  Double-free and foreign-block frees raise.
+    """
+
+    def __init__(self, num_blocks: int):
+        assert num_blocks > 0
+        self.num_blocks = num_blocks
+        self._free = list(range(num_blocks - 1, -1, -1))
+        self._held: set[int] = set()
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """n physical blocks, or None if the pool can't satisfy them."""
+        if n < 0 or n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        self._held.update(out)
+        return out
+
+    def free(self, blocks) -> None:
+        for blk in blocks:
+            if blk not in self._held:
+                raise ValueError(f"double/foreign free of block {blk}")
+            self._held.discard(blk)
+            self._free.append(blk)

@@ -1,0 +1,75 @@
+"""Batched token sampling: greedy / temperature / top-k / top-p with
+per-request parameters and per-request PRNG streams.
+
+One jitted call samples the whole decode batch: every request carries its
+own ``(temperature, top_k, top_p)`` triple and its own key stream (base
+key folded with the request id at admission, folded with the step index
+per token), so restarts and slot reuse are reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration.
+
+    ``temperature <= 0`` means greedy argmax (top-k/top-p ignored);
+    ``top_k == 0`` disables the top-k filter; ``top_p >= 1`` disables the
+    nucleus filter.  Filters compose: top-k first, then top-p over the
+    *unfiltered* sorted mass (the usual serving semantics).
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+
+def request_key(params: SamplingParams, rid: int) -> jax.Array:
+    """The request's base PRNG stream: seed ⊕ request id."""
+    return jax.random.fold_in(jax.random.PRNGKey(params.seed), rid)
+
+
+def sample_tokens(logits, temps, top_ks, top_ps, keys, steps):
+    """Sample one token per request.
+
+    logits (B, V) fp32; temps (B,) fp32; top_ks (B,) int32; top_ps (B,)
+    fp32; keys (B, 2) uint32 base streams; steps (B,) int32 per-request
+    step indices (folded into the key so every position draws fresh).
+    Returns (B,) int32.
+
+    Ties at the top-k boundary keep every tied logit (harmless: the
+    filter is a variance reducer, not an exact order statistic).
+    """
+    b, v = logits.shape
+    logits = logits.astype(jnp.float32)
+    temps = jnp.asarray(temps, jnp.float32)
+    top_ks = jnp.asarray(top_ks, jnp.int32)
+    top_ps = jnp.clip(jnp.asarray(top_ps, jnp.float32), 1e-6, 1.0)
+
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
+
+    sorted_desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    # top-k: keep logits >= the k-th largest (k == 0 disables)
+    kth = jnp.take_along_axis(sorted_desc,
+                              jnp.clip(top_ks - 1, 0, v - 1)[:, None],
+                              axis=-1)
+    keep_k = (top_ks[:, None] <= 0) | (scaled >= kth)
+    # top-p: smallest sorted prefix with mass >= p (exclusive cumsum keeps
+    # the argmax even for tiny p)
+    probs_sorted = jax.nn.softmax(sorted_desc, axis=-1)
+    cum_excl = jnp.cumsum(probs_sorted, axis=-1) - probs_sorted
+    keep_sorted = cum_excl < top_ps[:, None]
+    thresh_p = jnp.min(jnp.where(keep_sorted, sorted_desc, jnp.inf),
+                       axis=-1)
+    keep_p = scaled >= thresh_p[:, None]
+
+    masked = jnp.where(keep_k & keep_p, scaled, -jnp.inf)
+    step_keys = jax.vmap(jax.random.fold_in)(keys, steps)
+    drawn = jax.vmap(jax.random.categorical)(step_keys, masked)
+    return jnp.where(temps <= 0.0, greedy, drawn.astype(jnp.int32))

@@ -1,10 +1,16 @@
 """Distributed equivalence tests — each runs a subprocess with 8 fake host
-devices (device count is locked at first jax import in a process)."""
+devices (device count is locked at first jax import in a process).
+
+Marked ``dist`` so the CI fast tier can deselect the whole suite with
+``-m 'not dist'`` instead of relying on ``-x`` ordering luck.
+"""
 import os
 import subprocess
 import sys
 
 import pytest
+
+pytestmark = pytest.mark.dist
 
 _CHECKS = ["attention_grid", "attention_modes", "ring_pallas_path", "ssm",
            "moe", "e2e_loss", "decode_consistency", "grad_compression",

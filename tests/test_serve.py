@@ -1,0 +1,393 @@
+"""Serving engine: sampler properties, paged-vs-contiguous decode parity
+(bitwise), block allocator / scheduler units, engine end-to-end behaviour
+and the no-recompilation guarantee."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_reduced
+from repro.core.plan import build_plan
+from repro.models.decode import PagedLayout, decode_step, init_caches
+from repro.models.model import init_params
+from repro.serve import (BlockAllocator, SamplingParams, Scheduler,
+                         blocks_needed, init_paged_caches, sample_tokens)
+from repro.serve.engine import EngineConfig, ServeEngine
+from repro.serve.scheduler import DECODE, PREFILL, WAITING, Request
+
+
+# ---------------------------------------------------------------------------
+# Sampling
+# ---------------------------------------------------------------------------
+
+def _sample_one(logits, *, temperature=0.0, top_k=0, top_p=1.0, key=None,
+                step=0):
+    b = logits.shape[0]
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return np.asarray(sample_tokens(
+        jnp.asarray(logits), jnp.full((b,), temperature, jnp.float32),
+        jnp.full((b,), top_k, jnp.int32), jnp.full((b,), top_p, jnp.float32),
+        jnp.broadcast_to(jnp.asarray(key, jnp.uint32), (b, 2)),
+        jnp.full((b,), step, jnp.int32)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**20))
+def test_temperature_zero_matches_greedy_argmax(seed):
+    rng = np.random.default_rng(seed)
+    logits = rng.standard_normal((3, 64)).astype(np.float32)
+    toks = _sample_one(logits, temperature=0.0, top_k=7, top_p=0.3,
+                       key=jax.random.PRNGKey(seed))
+    np.testing.assert_array_equal(toks, logits.argmax(-1))
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(1, 16), seed=st.integers(0, 2**20))
+def test_top_k_support(k, seed):
+    """Sampled tokens always come from the k largest logits."""
+    rng = np.random.default_rng(seed)
+    logits = rng.standard_normal((4, 64)).astype(np.float32)
+    for step in range(5):
+        toks = _sample_one(logits, temperature=1.0, top_k=k,
+                           key=jax.random.PRNGKey(seed), step=step)
+        topk = np.argsort(logits, axis=-1)[:, -k:]
+        for b, t in enumerate(toks):
+            assert t in topk[b], (k, t)
+
+
+@settings(max_examples=10, deadline=None)
+@given(p=st.sampled_from([0.05, 0.3, 0.7, 0.95]), seed=st.integers(0, 2**20))
+def test_top_p_mass(p, seed):
+    """Sampled tokens lie in the smallest prefix of the sorted
+    distribution whose (exclusive) mass is below p — the nucleus."""
+    rng = np.random.default_rng(seed)
+    logits = (3.0 * rng.standard_normal((4, 32))).astype(np.float32)
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    for step in range(5):
+        toks = _sample_one(logits, temperature=1.0, top_p=p,
+                           key=jax.random.PRNGKey(seed), step=step)
+        for b, t in enumerate(toks):
+            order = np.argsort(-probs[b])
+            cum = np.cumsum(probs[b][order]) - probs[b][order]
+            nucleus = set(order[cum < p])
+            assert t in nucleus, (p, t, sorted(nucleus))
+
+
+def test_sampling_streams_reproducible_and_distinct():
+    rng = np.random.default_rng(0)
+    logits = rng.standard_normal((1, 128)).astype(np.float32)
+    a = [_sample_one(logits, temperature=1.0, key=jax.random.PRNGKey(7),
+                     step=s)[0] for s in range(20)]
+    b = [_sample_one(logits, temperature=1.0, key=jax.random.PRNGKey(7),
+                     step=s)[0] for s in range(20)]
+    c = [_sample_one(logits, temperature=1.0, key=jax.random.PRNGKey(8),
+                     step=s)[0] for s in range(20)]
+    assert a == b                 # same stream → same draws
+    assert a != c                 # different stream → different draws
+    assert len(set(a)) > 1        # per-step fold actually varies
+
+
+# ---------------------------------------------------------------------------
+# Block allocator / scheduler
+# ---------------------------------------------------------------------------
+
+def test_block_allocator_freelist():
+    alloc = BlockAllocator(8)
+    a = alloc.alloc(3)
+    b = alloc.alloc(5)
+    assert sorted(a + b) == list(range(8))
+    assert alloc.alloc(1) is None          # exhausted
+    alloc.free(a)
+    assert alloc.free_blocks == 3
+    c = alloc.alloc(3)
+    assert sorted(c) == sorted(a)          # recycled
+    with pytest.raises(ValueError):
+        alloc.free(c + c[:1])              # double free
+    assert blocks_needed(33, 16) == 3
+
+
+def _req(rid, prompt_len=16, max_new=8):
+    return Request(rid=rid, prompt=np.zeros(prompt_len, np.int32),
+                   sampling=SamplingParams(), max_new_tokens=max_new)
+
+
+def test_scheduler_admission_is_fifo_and_block_bounded():
+    alloc = BlockAllocator(6)
+    sched = Scheduler(max_batch=2, allocator=alloc, page_size=8,
+                      max_blocks_per_seq=4)
+    r1, r2, r3 = _req(1), _req(2), _req(3)       # 24 tokens → 3 blocks each
+    for r in (r1, r2, r3):
+        sched.submit(r)
+    admitted = sched.admit()
+    assert admitted == [r1, r2]                   # slots exhausted
+    assert r3.state == WAITING
+    assert alloc.free_blocks == 0
+    r1.state = DECODE
+    sched.retire(r1)
+    assert sched.admit() == [r3]                  # blocks + slot recycled
+    assert sched.slots[r3.slot] is r3
+
+    with pytest.raises(ValueError):               # over max_blocks_per_seq
+        sched.submit(_req(4, prompt_len=40, max_new=8))
+
+
+def test_scheduler_eviction_returns_to_queue_head():
+    alloc = BlockAllocator(8)
+    sched = Scheduler(max_batch=2, allocator=alloc, page_size=8,
+                      max_blocks_per_seq=4)
+    r1, r2 = _req(1), _req(2)
+    sched.submit(r1)
+    sched.submit(r2)
+    sched.admit()
+    held = alloc.free_blocks
+    sched.evict(r1)
+    assert r1.state == WAITING and r1.blocks == []
+    assert alloc.free_blocks > held
+    assert sched.waiting[0] is r1                 # head of queue
+    assert sched.admit() == [r1]                  # re-admitted first
+    assert r1.state == PREFILL
+
+
+# ---------------------------------------------------------------------------
+# Paged vs contiguous decode: bitwise parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "gemma2-2b",
+                                  "deepseek-v2-lite-16b"])
+def test_paged_decode_bitwise_equals_contiguous(arch):
+    """For the same ragged stream, decode through block-table pools is
+    bitwise identical to decode through contiguous caches: the gathered
+    view reconstructs the exact contiguous tensor, so every downstream op
+    sees identical inputs.  Covers full-attention GQA, sliding-window
+    ring buffers, and the absorbed-MLA latent cache."""
+    cfg = get_reduced(arch)
+    plan = build_plan(cfg, devices=jax.devices()[:1], impl="ref")
+    rt = plan.rt
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, PAGE, MAXB = 2, 8, 6
+    S = PAGE * MAXB                    # contiguous extent == gathered view
+    NB = B * MAXB
+    rng = np.random.default_rng(0)
+
+    cont = init_caches(cfg, B, S)
+    pools = init_paged_caches(cfg, num_blocks=NB, page_size=PAGE,
+                              max_batch=B)
+    # identity-layout block tables: request b owns blocks [b*MAXB, ...)
+    btabs = jnp.asarray(np.arange(NB).reshape(B, MAXB), jnp.int32)
+    paged = PagedLayout(btabs, PAGE, NB)
+
+    lengths = np.array([0, 3], np.int32)          # ragged from the start
+    with plan.mesh:
+        for step in range(6):
+            toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(B, 1)),
+                               jnp.int32)
+            pos = jnp.asarray(lengths)
+            lg_c, cont = decode_step(params, cont, toks, pos, rt, cfg)
+            lg_p, pools = decode_step(params, pools, toks, pos, rt, cfg,
+                                      paged)
+            np.testing.assert_array_equal(np.asarray(lg_c),
+                                          np.asarray(lg_p),
+                                          err_msg=f"{arch} step {step}")
+            lengths += 1
+
+
+def test_kv_start_masks_key_prefix():
+    """``kv_start`` bounds the visible key range from below — equivalent
+    to slicing the leading keys off, scalar or per-request."""
+    from repro.kernels.ref import attention_ref
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((2, 4, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 12, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 12, 2, 8)), jnp.float32)
+    out, _ = attention_ref(q, k, v, kv_start=3)
+    o_ref, _ = attention_ref(q, k[:, 3:], v[:, 3:])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(o_ref),
+                               atol=1e-6, rtol=1e-6)
+    starts = jnp.asarray([3, 5], jnp.int32)       # ragged per-request
+    out_b, _ = attention_ref(q, k, v, kv_start=starts)
+    for b, s0 in enumerate((3, 5)):
+        o_b, _ = attention_ref(q[b:b + 1], k[b:b + 1, s0:],
+                               v[b:b + 1, s0:])
+        np.testing.assert_allclose(np.asarray(out_b[b:b + 1]),
+                                   np.asarray(o_b), atol=1e-6, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Engine end-to-end
+# ---------------------------------------------------------------------------
+
+def _engine_setup(arch, max_batch=2, page=8, maxb=8, prefill_chunk=16):
+    cfg = get_reduced(arch)
+    plan = build_plan(cfg, devices=jax.devices()[:1], impl="ref")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    spec = EngineConfig(page_size=page, num_blocks=max_batch * maxb,
+                        max_blocks_per_seq=maxb, max_batch=max_batch,
+                        prefill_chunk=prefill_chunk)
+    return cfg, plan, params, spec
+
+
+@pytest.mark.parametrize("arch,prompt_len", [("qwen3-1.7b", 24),
+                                             ("gemma2-2b", 32),
+                                             ("deepseek-v2-lite-16b", 24)])
+def test_engine_greedy_matches_fixed_baseline(arch, prompt_len):
+    """Continuous-batching greedy output token-for-token equals the
+    fixed-batch contiguous baseline (gemma2 at a window-divisible prompt,
+    the baseline ring buffer's documented precondition)."""
+    from repro.launch.serve import generate
+    cfg, plan, params, spec = _engine_setup(arch)
+    rng = np.random.default_rng(0)
+    B, GEN = 2, 6
+    prompts = rng.integers(0, cfg.vocab, size=(B, prompt_len))
+    with plan.mesh:
+        base = np.asarray(generate(params, cfg, plan.rt,
+                                   jnp.asarray(prompts), gen=GEN))
+        eng = ServeEngine(plan, params, spec)
+        for b in range(B):
+            eng.submit(prompts[b], SamplingParams(), max_new_tokens=GEN)
+        res = eng.run()
+    for b in range(B):
+        assert res["requests"][b]["tokens"] == list(base[b]), arch
+
+
+def test_engine_continuous_batching_mixed_lengths():
+    """More requests than slots, ragged prompts and gen lengths: everyone
+    finishes with exactly its requested token count, pages are recycled,
+    and the pool ends fully free."""
+    cfg, plan, params, spec = _engine_setup("qwen3-1.7b", max_batch=2)
+    rng = np.random.default_rng(1)
+    lens = [(10, 3), (25, 9), (7, 5), (40, 2), (18, 7)]
+    with plan.mesh:
+        eng = ServeEngine(plan, params, spec)
+        for p_len, gen in lens:
+            eng.submit(rng.integers(0, cfg.vocab, size=p_len),
+                       SamplingParams(temperature=0.7, top_k=20, seed=3),
+                       max_new_tokens=gen)
+        res = eng.run()
+    for rid, (p_len, gen) in enumerate(lens):
+        assert len(res["requests"][rid]["tokens"]) == gen
+    assert eng.alloc.free_blocks == spec.num_blocks
+    assert all(r is None for r in eng.sched.slots)
+
+
+def test_engine_no_recompilation_across_stream():
+    """After warmup, a full mixed stream triggers zero new traces of the
+    decode step or any prefill bucket — bucketed shapes + pre-sized block
+    reservation keep every jit cache-hit (the grow_caches retrace bug
+    class, fixed)."""
+    cfg, plan, params, spec = _engine_setup("qwen3-1.7b", max_batch=2,
+                                            maxb=8, prefill_chunk=16)
+    rng = np.random.default_rng(2)
+    with plan.mesh:
+        eng = ServeEngine(plan, params, spec)
+        eng.warmup(prompt_lens=(16, 32), max_new=3)
+        decode_traces = eng.decode_traces
+        prefill_traces = dict(eng.prefill_traces)
+        assert decode_traces >= 1
+        for i in range(5):
+            eng.submit(rng.integers(0, cfg.vocab, size=8 + 5 * i),
+                       SamplingParams(), max_new_tokens=4 + i)
+        eng.run()
+        assert eng.decode_traces == decode_traces
+        assert set(eng.prefill_traces) == set(prefill_traces)
+
+
+def test_generate_single_decode_trace():
+    """The fixed-batch baseline pre-sizes caches to prompt+gen before the
+    loop: decode_step traces exactly once for the whole stream."""
+    from repro.launch.serve import generate
+    cfg = get_reduced("qwen3-1.7b")
+    plan = build_plan(cfg, devices=jax.devices()[:1], impl="ref")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab, size=(2, 12)), jnp.int32)
+    with plan.mesh:
+        out, traces = generate(params, cfg, plan.rt, tokens, gen=8,
+                               return_stats=True)
+    assert out.shape == (2, 8)
+    assert traces == {"prefill": 1, "decode": 1}
+
+
+def test_engine_evict_restarts_cleanly():
+    """Evicting a mid-decode request releases its pages, masks its slot,
+    and the re-admitted run reproduces the uninterrupted greedy output."""
+    cfg, plan, params, spec = _engine_setup("qwen3-1.7b", max_batch=1)
+    rng = np.random.default_rng(4)
+    p1 = rng.integers(0, cfg.vocab, size=12)
+    with plan.mesh:
+        eng = ServeEngine(plan, params, spec)
+        r1 = eng.submit(p1, SamplingParams(), max_new_tokens=8)
+        r2 = eng.submit(rng.integers(0, cfg.vocab, size=10),
+                        SamplingParams(), max_new_tokens=4)
+        for _ in range(4):
+            eng.step()
+        assert eng.requests[r1].state == DECODE
+        eng.evict(r1)
+        assert eng.alloc.free_blocks == spec.num_blocks
+        assert eng.sched.waiting[0] is eng.requests[r1]
+        res = eng.run()
+        assert len(res["requests"][r1]["tokens"]) == 8
+        assert len(res["requests"][r2]["tokens"]) == 4
+        eng2 = ServeEngine(plan, params, spec)
+        rid = eng2.submit(p1, SamplingParams(), max_new_tokens=8)
+        res2 = eng2.run()
+    assert res["requests"][r1]["tokens"] == res2["requests"][rid]["tokens"]
+
+
+def test_engine_eos_stops_early():
+    cfg, plan, params, spec = _engine_setup("qwen3-1.7b")
+    prompt = np.random.default_rng(3).integers(0, cfg.vocab, size=12)
+    with plan.mesh:
+        eng = ServeEngine(plan, params, spec)
+        rid = eng.submit(prompt, SamplingParams(), max_new_tokens=50)
+        res = eng.run()
+        toks = res["requests"][rid]["tokens"]
+        eos = toks[2]                      # force an early stop on rerun
+        eng.requests.clear()
+        rid2 = eng.submit(prompt, SamplingParams(), max_new_tokens=50,
+                          eos_id=eos)
+        res2 = eng.run()
+    got = res2["requests"][rid2]["tokens"]
+    assert got == toks[:3]                 # greedy → same prefix, then stop
+    assert got[-1] == eos
+
+
+# ---------------------------------------------------------------------------
+# Serve-mode plan
+# ---------------------------------------------------------------------------
+
+def test_serve_spec_from_memory_model_and_describe():
+    cfg = get_reduced("qwen3-1.7b")
+    plan = build_plan(cfg, devices=jax.devices()[:1])
+    sv = plan.serve_spec(page_size=16, max_batch=4, max_seq_len=1024)
+    assert sv.max_blocks_per_seq == 64
+    assert sv.num_blocks >= sv.max_blocks_per_seq
+    assert sv.num_blocks <= 4 * 64            # capped at usable maximum
+    # per-token bytes: 2 (k+v) * kv_heads * head_dim * 4B * layers
+    assert sv.paged_bytes_per_token == \
+        2 * cfg.n_kv_heads * cfg.hd * 4 * cfg.num_layers
+    assert "serve" in plan.describe()
+    assert f"page={sv.page_size}" in plan.describe()
+
+    # tiny budget: the pool shrinks below the usable cap but never below
+    # one full sequence
+    small = build_plan(cfg, devices=jax.devices()[:1],
+                       memory_budget_gb=0.0005)
+    sv_small = small.serve_spec(page_size=16, max_batch=4,
+                                max_seq_len=1024)
+    assert sv_small.num_blocks == sv_small.max_blocks_per_seq
+
+    # families without a paged decode path report n/a
+    ssm_plan = build_plan(get_reduced("falcon-mamba-7b"),
+                          devices=jax.devices()[:1])
+    assert ssm_plan.serve_spec() is None
+    assert "paged=n/a" in ssm_plan.describe()
+
+
+def test_window_arch_serve_spec_accounts_ring_bytes():
+    cfg = get_reduced("gemma2-2b")
+    plan = build_plan(cfg, devices=jax.devices()[:1])
+    sv = plan.serve_spec()
+    assert sv.window_bytes > 0                 # local layers: fixed rings
+    assert sv.paged_bytes_per_token > 0        # global layers: paged

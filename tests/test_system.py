@@ -23,6 +23,7 @@ def _mk(cfg, d, steps, ckpt_every=10, grad_accum=1):
                                  ckpt_every=ckpt_every, log_every=1000))
 
 
+@pytest.mark.slow
 def test_train_loss_decreases_and_resumes():
     cfg = get_reduced("qwen3-1.7b")
     with tempfile.TemporaryDirectory() as d:
@@ -38,6 +39,7 @@ def test_train_loss_decreases_and_resumes():
         assert more[-1] < losses[0]
 
 
+@pytest.mark.slow
 def test_straggler_monitor_integrated():
     cfg = get_reduced("olmo-1b")
     with tempfile.TemporaryDirectory() as d:
@@ -48,6 +50,7 @@ def test_straggler_monitor_integrated():
         assert rep["median_s"] > 0
 
 
+@pytest.mark.slow
 def test_trainer_with_grad_accum_learns():
     """The microbatched trainer loop (accum=2, (2, 4, S) batches) still
     reduces the loss end to end."""
