@@ -1,134 +1,10 @@
-"""LoongTrain §4.5 cost model instantiated with TPU v5e constants.
-
-The paper evaluates on A100 + 4×HDR nodes; we target a v5e pod, so the
-model is re-based on ICI:
-
-* peak = 197 TF/s bf16/chip;  per-link ICI = 50 GB/s.
-* "intra-node NVLINK" ≙ collectives over the ICI-*minor* mesh axis
-  (single-hop neighbours): full link bw.
-* "inter-node NIC"    ≙ collectives over major axes: modelled at half
-  effective bw (multi-hop average on the torus) — the placement trade-off
-  of §4.4 survives with the same structure.
-* Double ring: inner ring uses one torus dimension, outer the other; both
-  can run concurrently (the "use all NICs" insight).
-
-These formulas power benchmarks that mirror the paper's Tables 2-5.  They
-are *models*, cross-checked against dry-run collective bytes (see
-EXPERIMENTS.md §Roofline); wall-time numbers on real v5e would calibrate α.
+"""Thin shim: the §4.5 cost model now lives in ``repro/analysis/cost.py``
+(one implementation shared by the PlanTuner, the roofline, and these
+benches).  This module re-exports the public surface so existing bench
+invocations and notebooks keep working.
 """
-from __future__ import annotations
-
-import dataclasses
-
-PEAK = 197e12          # bf16 FLOP/s per chip
-ICI = 50e9             # B/s per link
-MAJOR_PENALTY = 0.5    # effective bw multiplier for ICI-major-axis traffic
-BYTES = 2              # bf16
-
-
-@dataclasses.dataclass(frozen=True)
-class AttnCase:
-    s: int                 # sequence length
-    d: int = 4096          # hidden
-    h: int = 32            # query heads
-    h_kv: int = 32         # kv heads (MHA: == h)
-    sp: int = 64           # total sequence-parallel degree
-    hp: int = 1
-    w: int = 4             # inner ring size
-    placement: str = "head_first"
-    causal: bool = True
-
-    @property
-    def cp(self) -> int:
-        return self.sp // self.hp
-
-    @property
-    def hd(self) -> int:
-        return self.d // self.h
-
-
-def attn_flops_per_device(c: AttnCase) -> float:
-    """Useful attention FLOPs per device per layer fwd (causal halved)."""
-    full = 4.0 * c.s * c.s * c.d          # QK^T + PV, MACs×2
-    if c.causal:
-        full *= 0.5
-    return full / c.sp
-
-
-def comp_time_fwd(c: AttnCase) -> float:
-    """One ring micro-step of compute (paper: α S²D/(cp·sp))."""
-    per_step = attn_flops_per_device(c) / c.cp
-    return per_step / PEAK
-
-
-def kv_chunk_bytes(c: AttnCase) -> float:
-    """Paper §4.5.3: Size(kv) = max(Hkv, hp)/H × (2 tensors)·S·D/sp ·bytes."""
-    h_eff = max(c.h_kv, c.hp)
-    return h_eff / c.h * 2.0 * c.s * c.d / c.sp * BYTES
-
-
-def p2p_time(c: AttnCase, *, inner: bool) -> float:
-    bw = ICI
-    # context-first: inner ring is ICI-minor (full bw); head-first: the head
-    # axis is minor, pushing rings to major axes.
-    if c.placement == "context_first":
-        if not inner:
-            bw *= MAJOR_PENALTY
-    else:
-        bw *= MAJOR_PENALTY
-    return kv_chunk_bytes(c) / bw
-
-
-def alltoall_time(c: AttnCase) -> float:
-    """Paper §4.5.4: Σ_{q,k,v,out} size × (hp-1)/hp, over the hp axis."""
-    if c.hp == 1:
-        return 0.0
-    q = out = 2.0 * c.s * c.d / c.sp * BYTES / 2         # Size(q) el=2SD/sp
-    kv = kv_chunk_bytes(c)                               # K and V together
-    vol = (q + out + kv) * (c.hp - 1) / c.hp
-    bw = ICI if c.placement == "head_first" else ICI * MAJOR_PENALTY
-    return vol / bw
-
-
-def attention_op_time(c: AttnCase, *, backward: bool = False) -> float:
-    """Paper's overlap model: T = T_a2a + (cp/w)·[A(w-1) + B]."""
-    t_comp = comp_time_fwd(c) * (3.0 if backward else 1.0)
-    t_inner = p2p_time(c, inner=True) * (2.0 if backward else 1.0)
-    t_outer = p2p_time(c, inner=False) * (2.0 if backward else 1.0)
-    w = min(c.w, c.cp)
-    n_outer = c.cp // w
-    a = max(t_comp, t_inner)
-    b = max(t_comp, t_outer)
-    ring = n_outer * (a * (w - 1) + b)
-    return alltoall_time(c) * (2.0 if backward else 1.0) + ring
-
-
-def layer_linear_flops(d: int, d_ff: int, s: int, h: int, hd: int,
-                       h_kv: int) -> float:
-    qkvo = 2.0 * s * d * (h * hd + 2 * h_kv * hd + h * hd)
-    mlp = 2.0 * s * d * d_ff * 3
-    return qkvo + mlp
-
-
-def end_to_end_mfu(c: AttnCase, *, d_ff: int = 11008, n_layers: int = 32,
-                   sc_pp: bool = True) -> float:
-    """Modelled training MFU for a LLaMA-7B-like stack on sp devices.
-
-    Non-attention compute is assumed perfectly overlapped/balanced (it has
-    no sequence-length-dependent communication under hybrid ZeRO);
-    attention uses the overlap model above.  Without SC++, the attention
-    forward is recomputed during backward (full-layer gradient
-    checkpointing); with SC++ it is not (the paper's §5.2 point).
-    """
-    lin_flops = layer_linear_flops(c.d, d_ff, c.s, c.h, c.hd, c.h_kv) / c.sp
-    attn_flops = attn_flops_per_device(c)
-    useful = (lin_flops + attn_flops) * 3.0       # fwd + 2×bwd
-    t_lin = lin_flops * 3.0 / PEAK
-    # full-layer remat recomputes the linear fwd either way (activation
-    # memory at 1M tokens forces checkpointing; SC++ only spares attention)
-    t_lin += lin_flops / PEAK
-    t_attn = attention_op_time(c) + attention_op_time(c, backward=True)
-    if not sc_pp:
-        t_attn += attention_op_time(c)            # recompute fwd in bwd
-    t_total = t_lin + t_attn
-    return useful / (t_total * PEAK)
+from repro.analysis.cost import (                                 # noqa: F401
+    BYTES, ICI, MAJOR_PENALTY, PEAK, AttnCase, CostConstants, V5E,
+    alltoall_time, attention_op_time, attn_flops_per_device,
+    comp_time_fwd, end_to_end_mfu, kv_chunk_bytes, layer_linear_flops,
+    layer_step_time, p2p_time, train_step_time)

@@ -10,6 +10,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
 * ``micro_*`` rows are real wall-clock measurements on this host (1 CPU
   device): ref-path attention, interpret-mode kernel check, reduced-config
   train steps.
+* ``tune`` (also standalone: ``run.py tune``) exercises the PlanTuner
+  end to end — calibrated enumerate+score, top-3 measured live — and
+  writes the predicted-vs-measured record to ``BENCH_tune.json``.
 """
 from __future__ import annotations
 
@@ -394,18 +397,53 @@ def bench_serve(out_path: str = "BENCH_serve.json"):
         json.dump(bench, f, indent=2)
 
 
+def bench_tune(out_path: str = "BENCH_tune.json"):
+    """PlanTuner predicted-vs-measured: enumerate+score the reduced
+    config's plan space for this host's devices with *calibrated* cost
+    constants, measure the analytic top-3 live (jit + timed steps), and
+    write both numbers per candidate to ``BENCH_tune.json``.
+
+    The tracked signal is the measured step time of the tuner's picks
+    (does the winner stay fast?) — the prediction is recorded alongside
+    as the model-quality trajectory (``ratio`` = measured/predicted; on
+    this CPU host expect O(1–50): the analytic model is a TPU network
+    model, calibration only rescales its peaks to host ballpark).
+    """
+    from repro.configs import get_reduced
+    from repro.tune import tune
+    from repro.tune.calibrate import constants_from_raw, run_microbenchmarks
+
+    cfg = get_reduced("qwen3-1.7b")
+    import jax
+    const = constants_from_raw(run_microbenchmarks())   # hermetic: no file
+    seq, gb = 256, 8
+    result = tune(cfg, num_devices=len(jax.devices()), seq_len=seq,
+                  global_batch=gb, memory_budget_gb=1.0, const=const,
+                  measure_top_k=3, arch=cfg.name)
+    bench = {"config": {"arch": cfg.name, "seq_len": seq,
+                        "global_batch": gb,
+                        "devices": len(jax.devices()),
+                        "space_size": result.space_size,
+                        "calibration": const.source},
+             "cases": []}
+    for s in result.ranked[:3]:
+        case = {"tag": s.tag, "predicted_ms": round(s.score_s * 1e3, 3)}
+        if s.measured_s is not None:
+            case["measured_ms"] = round(s.measured_s * 1e3, 3)
+            case["ratio"] = round(s.measured_s / max(s.score_s, 1e-12), 2)
+        bench["cases"].append(case)
+        _row(f"tune.{s.tag}", (s.measured_s or s.score_s) * 1e6,
+             f"predicted_ms={case['predicted_ms']}")
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=2)
+
+
 def main() -> None:
-    if len(sys.argv) > 1 and sys.argv[1] == "ring":
+    sections = {"ring": micro_ring_step, "train": bench_train_step,
+                "serve": bench_serve, "tune": bench_tune}
+    if len(sys.argv) > 1 and sys.argv[1] in sections:
         print("name,us_per_call,derived")
-        micro_ring_step()
-        return
-    if len(sys.argv) > 1 and sys.argv[1] == "train":
-        print("name,us_per_call,derived")
-        bench_train_step()
-        return
-    if len(sys.argv) > 1 and sys.argv[1] == "serve":
-        print("name,us_per_call,derived")
-        bench_serve()
+        sections[sys.argv[1]]()
         return
     print("name,us_per_call,derived")
     t2_endtoend()
@@ -418,6 +456,7 @@ def main() -> None:
     micro_train_step()
     bench_train_step()
     bench_serve()
+    bench_tune()
 
 
 if __name__ == "__main__":

@@ -1,15 +1,18 @@
 #!/usr/bin/env bash
 # Tiered gate.  Run from anywhere:
-#     scripts/check.sh --fast    # tier-1 pytest only (single-device tests;
-#                                # dist/slow suites deselected by marker)
+#     scripts/check.sh --fast    # tier-1 pytest (single-device tests;
+#                                # dist/slow deselected) + PlanTuner
+#                                # enumerate+score smoke (no measurement)
 #     scripts/check.sh           # full: all tests + benches + bench gate +
-#                                # plan smoke + serve smoke
+#                                # plan/tune smoke + serve smoke
 # The full tier rewrites BENCH_ring.json / BENCH_train_step.json /
-# BENCH_serve.json and diffs them against the committed baselines
-# (scripts/bench_gate.py) so perf regressions on the ring hot path, the
-# (accumulated) train step, and the serving engine show up immediately;
-# the dryrun --plan invocation fails fast on ExecutionPlan regressions
-# for every production cell of one arch without compiling anything.
+# BENCH_serve.json / BENCH_tune.json and diffs them against the committed
+# baselines (scripts/bench_gate.py) so perf regressions on the ring hot
+# path, the (accumulated) train step, the serving engine, and the tuner's
+# picks show up immediately; the dryrun --plan [--tune] invocations fail
+# fast on ExecutionPlan/PlanTuner regressions for production cells of one
+# arch without compiling anything.  Baselines are refreshed with
+# `python scripts/bench_gate.py --update-baselines` on a quiet machine.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -17,6 +20,8 @@ export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${1:-}" == "--fast" ]]; then
     python -m pytest -q -m "not dist and not slow"
+    python -m repro.launch.tune --arch qwen3-1.7b --smoke \
+        --out /tmp/check_tuned_plan.json
     exit 0
 fi
 
@@ -24,7 +29,10 @@ python -m pytest -x -q
 python benchmarks/run.py ring
 python benchmarks/run.py train
 python benchmarks/run.py serve
+python benchmarks/run.py tune
 python scripts/bench_gate.py
 python -m repro.launch.dryrun --plan --arch qwen3-1.7b --shape all
+python -m repro.launch.dryrun --plan --tune --arch qwen3-1.7b \
+    --shape train_4k
 python -m repro.launch.serve --arch qwen3-1.7b --smoke \
     --prompt-len 24 --gen 8 --batch 2 --requests 4

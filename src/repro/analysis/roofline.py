@@ -20,9 +20,13 @@ import os
 
 import jax
 
-PEAK_FLOPS = 197e12        # bf16 / chip
-HBM_BW = 819e9             # B/s / chip
-ICI_BW = 50e9              # B/s / link
+from repro.analysis import cost
+
+# Hardware constants come from the shared cost model (one source of truth
+# with the §4.5 analytic model and the PlanTuner).
+PEAK_FLOPS = cost.PEAK     # bf16 / chip
+HBM_BW = cost.HBM_BW       # B/s / chip
+ICI_BW = cost.ICI          # B/s / link
 
 
 @dataclasses.dataclass(frozen=True)

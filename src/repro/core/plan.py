@@ -94,7 +94,19 @@ def _fmt_bytes(b: float) -> str:
     return f"{b:.1f}GB"
 
 
-def choose_zero_mode(n_params: int, mesh: Mesh, budget_bytes: float,
+class _ShapeOnlyMesh:
+    """Duck-typed stand-in for a ``Mesh`` where only ``.shape`` is read
+    (``choose_zero_mode`` / ``_group_size``).  Lets the memory model run
+    from a ``ParallelConfig`` alone — the PlanTuner prunes thousands of
+    candidate points without constructing a device mesh per point."""
+
+    def __init__(self, pc: ParallelConfig):
+        self.shape = {AXIS_POD: pc.pods, AXIS_DATA: pc.dp,
+                      MODEL_AXES[0]: pc.hp, MODEL_AXES[1]: pc.cp_outer,
+                      MODEL_AXES[2]: pc.cp_inner}
+
+
+def choose_zero_mode(n_params: int, mesh, budget_bytes: float,
                      *, include_pod: bool = False):
     """AMSP mode selection from the param+optimizer memory model.
 
@@ -339,37 +351,27 @@ class ExecutionPlan:
         return "\n".join(lines)
 
 
-def build_plan(cfg, pc: ParallelConfig | None = None, opt=None, *,
-               devices=None, base_mesh: Mesh | None = None,
-               impl: str | None = None, grad_accum: int = 1,
-               remat: str | None = None, zero: str = "auto",
-               memory_budget_gb: float = 16.0,
-               include_pod: bool = False,
-               seq_len: int | None = None,
-               global_batch: int | None = None) -> ExecutionPlan:
-    """Build the ExecutionPlan — the only place these decisions are made.
+def plan_memory(cfg, pc: ParallelConfig, *, grad_accum: int = 1,
+                remat: str | None = None, zero: str = "auto",
+                memory_budget_gb: float = 16.0,
+                include_pod: bool = False,
+                seq_len: int | None = None,
+                global_batch: int | None = None,
+                mesh=None):
+    """The param+optimizer+activation memory model behind ``build_plan``.
 
-    * ``devices`` / ``base_mesh`` — flat device list (tests, single-host)
-      or a production ``(pod, data, model)`` mesh to refine.
-    * ``impl`` — attention impl; ``None`` auto-selects by backend.
-    * ``remat`` — ``None`` keeps ``cfg.remat``; ``"auto"`` decides from
-      the activation memory model (needs ``seq_len``+``global_batch``);
-      an explicit policy overrides.
-    * ``zero`` — ``"auto"`` picks the AMSP mode from the memory model;
-      or force ``replica | dp | sp | dp_sp | pod_dp_sp``.
+    Runnable without devices: with ``mesh=None`` group extents come from
+    the ``ParallelConfig`` shape alone (``_ShapeOnlyMesh``), which is how
+    the PlanTuner (``repro/tune``) prunes candidate configurations at
+    enumeration scale.  Returns ``(remat_policy, zero_mode, groups, mem)``
+    where ``mem`` carries the per-device estimates plus the feasibility
+    verdicts ``fits_state`` / ``fits``.
     """
-    from repro.train.optimizer import OptConfig
-    pc = pc or ParallelConfig()
-    opt = opt or OptConfig()
     pc.validate()
     assert grad_accum >= 1
     if global_batch is not None:
         assert global_batch % grad_accum == 0, (global_batch, grad_accum)
-
-    mesh = refine_mesh(base_mesh, pc) if base_mesh is not None \
-        else make_mesh(pc, devices=devices)
-    if impl is None:
-        impl = "auto" if jax.default_backend() == "tpu" else "ref"
+    shape = mesh if mesh is not None else _ShapeOnlyMesh(pc)
 
     budget = memory_budget_gb * 1e9
     n_params = _param_count(cfg)
@@ -377,16 +379,16 @@ def build_plan(cfg, pc: ParallelConfig | None = None, opt=None, *,
     # hybrid-ZeRO extent from the param+optimizer memory model
     if zero == "auto":
         zero_mode, group, groups = choose_zero_mode(
-            n_params, mesh, budget, include_pod=include_pod)
+            n_params, shape, budget, include_pod=include_pod)
     else:
         by_name = dict(ZERO_MODES)
         assert zero in by_name, (zero, sorted(by_name))
         zero_mode, group = zero, by_name[zero]
         smaller = tuple(g for _, g in ZERO_MODES
-                        if g and _group_size(mesh, g) <
-                        max(_group_size(mesh, group), 1))
+                        if g and _group_size(shape, g) <
+                        max(_group_size(shape, group), 1))
         groups = ((group,) if group else ()) + tuple(reversed(smaller))
-    extent = max(_group_size(mesh, group), 1)
+    extent = max(_group_size(shape, group), 1)
     state_dev = n_params * STATE_BYTES_PER_PARAM / extent
     half_dev = n_params * HALF_BYTES_PER_PARAM / extent
 
@@ -408,20 +410,88 @@ def build_plan(cfg, pc: ParallelConfig | None = None, opt=None, *,
             else cfg.remat
     else:
         policy = remat or cfg.remat
+
+    act_dev = (tokens_dev or 0) * cfg.d_model * 2 \
+        * ACT_UNITS[policy] * cfg.num_layers
+    total_dev = state_dev + half_dev + act_dev
+    mem = {"n_params": n_params, "state_dev": state_dev,
+           "half_dev": half_dev, "act_dev": act_dev,
+           "total_dev": total_dev,
+           "zero_extent": extent, "microbatch": microbatch,
+           "batch_shardable": batch_shardable,
+           "fits_state": state_dev + half_dev
+           <= budget * STATE_BUDGET_FRAC,
+           "fits": (state_dev + half_dev <= budget * STATE_BUDGET_FRAC
+                    and total_dev <= budget)}
+    return policy, zero_mode, groups, mem
+
+
+def build_plan(cfg, pc: ParallelConfig | None = None, opt=None, *,
+               devices=None, base_mesh: Mesh | None = None,
+               impl: str | None = None, grad_accum: int | None = None,
+               remat: str | None = None, zero: str | None = None,
+               memory_budget_gb: float = 16.0,
+               include_pod: bool = False,
+               seq_len: int | None = None,
+               global_batch: int | None = None,
+               tuned=None) -> ExecutionPlan:
+    """Build the ExecutionPlan — the only place these decisions are made.
+
+    * ``devices`` / ``base_mesh`` — flat device list (tests, single-host)
+      or a production ``(pod, data, model)`` mesh to refine.
+    * ``impl`` — attention impl; ``None`` auto-selects by backend.
+    * ``remat`` — ``None`` keeps ``cfg.remat``; ``"auto"`` decides from
+      the activation memory model (needs ``seq_len``+``global_batch``);
+      an explicit policy overrides.
+    * ``zero`` — ``None``/``"auto"`` picks the AMSP mode from the memory
+      model; or force ``replica | dp | sp | dp_sp | pod_dp_sp``.
+    * ``tuned`` — a ``repro.tune.TunedPlan`` (or any object with its
+      fields): fills every knob the caller left unset (``None``) —
+      ``pc``, ``grad_accum``, ``zero``, ``remat``, ``seq_len``,
+      ``global_batch`` — so a persisted tuner winner rebuilds the exact
+      plan with zero re-search.  Any explicitly passed value wins over
+      the file.
+    """
+    from repro.train.optimizer import OptConfig
+    if tuned is not None:
+        if pc is None:
+            pc = ParallelConfig(dp=tuned.dp, hp=tuned.hp,
+                                cp_outer=tuned.cp_outer,
+                                cp_inner=tuned.cp_inner, pods=tuned.pods,
+                                placement=tuned.placement)
+        if grad_accum is None:
+            grad_accum = tuned.grad_accum
+        if remat is None:
+            remat = tuned.remat
+        if zero is None:
+            zero = tuned.zero
+        if seq_len is None:
+            seq_len = tuned.seq_len
+        if global_batch is None:
+            global_batch = tuned.global_batch
+    grad_accum = 1 if grad_accum is None else grad_accum
+    zero = zero or "auto"
+    pc = pc or ParallelConfig()
+    opt = opt or OptConfig()
+    pc.validate()
+
+    mesh = refine_mesh(base_mesh, pc) if base_mesh is not None \
+        else make_mesh(pc, devices=devices)
+    if impl is None:
+        impl = "auto" if jax.default_backend() == "tpu" else "ref"
+
+    policy, zero_mode, groups, mem = plan_memory(
+        cfg, pc, grad_accum=grad_accum, remat=remat, zero=zero,
+        memory_budget_gb=memory_budget_gb, include_pod=include_pod,
+        seq_len=seq_len, global_batch=global_batch, mesh=mesh)
     if policy != cfg.remat:
         cfg = dataclasses.replace(cfg, remat=policy)
 
-    act_dev = (tokens_dev or 0) * cfg.d_model * 2 \
-        * ACT_UNITS[cfg.remat] * cfg.num_layers
     rt = Runtime(mesh=mesh, pc=pc, impl=impl,
-                 batch_axes=BATCH_AXES if batch_shardable else ())
-    mem = {"n_params": n_params, "state_dev": state_dev,
-           "half_dev": half_dev, "act_dev": act_dev,
-           "total_dev": state_dev + half_dev + act_dev,
-           "zero_extent": extent, "microbatch": microbatch,
-           "batch_shardable": batch_shardable}
+                 batch_axes=BATCH_AXES if mem["batch_shardable"] else ())
     return ExecutionPlan(cfg=cfg, pc=pc, opt=opt, mesh=mesh, rt=rt,
                          grad_accum=grad_accum, zero_mode=zero_mode,
-                         zero_groups=groups, memory_budget=budget,
+                         zero_groups=groups,
+                         memory_budget=memory_budget_gb * 1e9,
                          seq_len=seq_len, global_batch=global_batch,
                          mem=mem)

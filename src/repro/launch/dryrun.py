@@ -171,7 +171,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              remat: str | None = None, out_dir: str | None = None,
              hlo_out: str | None = None, tag_extra: str = "",
              param_sharding: str = "zero",
-             plan_only: bool = False) -> dict:
+             plan_only: bool = False, tune_table: bool = False) -> dict:
     """One dry-run cell.
 
     The full-size model compiles with scanned layers (the scale/memory
@@ -193,8 +193,25 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     if plan_only:
         desc = plan.describe()
         print(desc)
-        return {"arch": arch, "shape": shape_name, "plan_only": True,
-                "describe": desc}
+        rec = {"arch": arch, "shape": shape_name, "plan_only": True,
+               "describe": desc}
+        if tune_table:
+            # PlanTuner's top-5 for this cell's frame (dp pinned to the
+            # production layout; the model-axis split, placement and the
+            # execution knobs are up for grabs) — the placement
+            # trade-offs, inspectable without compiling anything.
+            from repro.tune import tune
+            result = tune(cfg, num_devices=mesh.size,
+                          seq_len=shape.seq_len,
+                          global_batch=shape.global_batch,
+                          pods=pc.pods, dp=pc.dp,
+                          memory_budget_gb=16.0, arch=arch)
+            table = result.table(top=5)
+            print(table)
+            rec["tune_table"] = table
+            if result.ranked:
+                rec["tuned"] = result.tuned_plan().to_json()
+        return rec
 
     # 1) full-size scanned compile — the dry-run pass/fail + memory truth
     compiled, t_lower, t_compile = _compile_cell(
@@ -283,6 +300,10 @@ def main():
     ap.add_argument("--plan", action="store_true",
                     help="print ExecutionPlan.describe() per cell and "
                          "skip the compiles (fast plan regression smoke)")
+    ap.add_argument("--tune", action="store_true",
+                    help="with --plan: also print the PlanTuner's top-5 "
+                         "candidate table per cell (enumerate+score "
+                         "only, nothing runs)")
     args = ap.parse_args()
 
     archs = all_arch_names() if args.arch == "all" else [args.arch]
@@ -306,7 +327,8 @@ def main():
                                impl=args.impl, remat=args.remat,
                                out_dir=args.out, hlo_out=args.hlo_out,
                                param_sharding=args.param_sharding,
-                               tag_extra=args.tag, plan_only=args.plan)
+                               tag_extra=args.tag, plan_only=args.plan,
+                               tune_table=args.plan and args.tune)
                 if args.plan:
                     continue
                 c = rec["cost"]

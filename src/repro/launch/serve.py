@@ -3,10 +3,15 @@ families) or the fixed-batch contiguous baseline.
 
     python -m repro.launch.serve --arch qwen3-1.7b --smoke \
         --prompt-len 32 --gen 16 --batch 2 --requests 6 --engine paged
+
+``--plan-file plan.json`` consumes a PlanTuner ``TunedPlan`` (layout,
+ZeRO, remat and the paged ``page_size`` all come from the cached tuning
+run); ``--tune`` searches first and caches when ``--plan-file`` is given.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import numpy as np
@@ -76,11 +81,18 @@ def main():
                     help="request-stream length (default: --batch)")
     ap.add_argument("--engine", choices=["paged", "fixed"], default=None,
                     help="default: paged for dense/moe, fixed otherwise")
-    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="paged-KV page size (default: 16, or the tuned "
+                         "plan's value under --plan-file)")
     ap.add_argument("--prefill-chunk", type=int, default=64)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--tune", action="store_true",
+                    help="search the plan space for the attached devices")
+    ap.add_argument("--plan-file", default=None,
+                    help="TunedPlan JSON: consumed when it exists, "
+                         "written by --tune otherwise")
     ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args()
 
@@ -92,7 +104,35 @@ def main():
         cfg = get_config(args.arch)
         pc = get_parallel(args.arch, "decode_32k", False)
         devices = None
-    plan = build_plan(cfg, pc, devices=devices)
+
+    tuned = None
+    if args.tune or args.plan_file:
+        from repro.tune import TunedPlan, tune
+        if args.plan_file and os.path.exists(args.plan_file):
+            tuned = TunedPlan.load(args.plan_file)
+            assert tuned.arch == args.arch, \
+                f"{args.plan_file} was tuned for {tuned.arch!r}, " \
+                f"not {args.arch!r}"
+            print(f"[serve] tuned plan from {args.plan_file} "
+                  f"(no re-search"
+                  + (": delete the file to re-search with --tune"
+                     if args.tune else "") + ")")
+        else:
+            result = tune(cfg, num_devices=len(jax.devices()),
+                          seq_len=args.prompt_len + args.gen,
+                          global_batch=args.batch,
+                          memory_budget_gb=1.0 if args.smoke else 16.0,
+                          accums=(1,), arch=args.arch)
+            print(result.table())
+            tuned = result.tuned_plan(page_size=args.page_size or 16)
+            if args.plan_file:
+                tuned.save(args.plan_file)
+                print(f"[serve] tuned plan cached -> {args.plan_file}")
+        pc, devices = tuned.parallel(), None
+        if args.page_size is None:        # explicit flag beats the file
+            args.page_size = tuned.page_size
+    args.page_size = args.page_size or 16
+    plan = build_plan(cfg, pc, devices=devices, tuned=tuned)
     print(plan.describe())
     mesh, rt = plan.mesh, plan.rt
 

@@ -13,11 +13,18 @@ remat, microbatching — are made once by ``build_plan`` and printed via
 
 ``--smoke`` swaps in the reduced config + a 1-device mesh — the same code
 path end to end, laptop-sized.
+
+PlanTuner integration: ``--plan-file plan.json`` consumes a persisted
+``TunedPlan`` (no search — the cached winner supplies dp/hp/cp/placement,
+grad-accum, remat and ZeRO); ``--tune`` runs the enumerate+score search
+for the attached devices first and, when ``--plan-file`` is also given,
+caches the winner there for the next run.
 """
 from __future__ import annotations
 
 import argparse
 import logging
+import os
 
 import jax
 
@@ -28,19 +35,61 @@ from repro.train.optimizer import OptConfig
 from repro.train.trainer import Trainer, TrainerConfig
 
 
+def resolve_tuned(args, cfg, *, seq: int, gb: int, smoke: bool):
+    """--plan-file / --tune resolution: a cached TunedPlan wins; --tune
+    searches (and caches to --plan-file when given)."""
+    from repro.tune import TunedPlan, tune
+    if args.plan_file and os.path.exists(args.plan_file):
+        tuned = TunedPlan.load(args.plan_file)
+        assert tuned.arch == args.arch, \
+            f"{args.plan_file} was tuned for {tuned.arch!r}, " \
+            f"not {args.arch!r} — delete it or pass the matching --arch"
+        print(f"[train] tuned plan from {args.plan_file}: "
+              f"dp{tuned.dp}/hp{tuned.hp}/cp{tuned.cp_outer}x"
+              f"{tuned.cp_inner}/{tuned.placement} accum="
+              f"{tuned.grad_accum} remat={tuned.remat} "
+              f"zero={tuned.zero} (no re-search)")
+        if args.tune:
+            print("[train] --tune ignored: cached plan exists "
+                  f"(delete {args.plan_file} to re-search)")
+        if (tuned.seq_len, tuned.global_batch) != (seq, gb):
+            print(f"[train] note: plan was tuned for seq="
+                  f"{tuned.seq_len} gb={tuned.global_batch}, "
+                  f"running seq={seq} gb={gb}")
+        return tuned
+    result = tune(cfg, num_devices=len(jax.devices()), seq_len=seq,
+                  global_batch=gb,
+                  memory_budget_gb=1.0 if smoke else 16.0,
+                  arch=args.arch)
+    print(result.table())
+    tuned = result.tuned_plan()
+    if args.plan_file:
+        tuned.save(args.plan_file)
+        print(f"[train] tuned plan cached -> {args.plan_file}")
+    return tuned
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--seq-len", type=int, default=4096)
     ap.add_argument("--global-batch", type=int, default=256)
-    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--grad-accum", type=int, default=None,
+                    help="microbatches per step (default: 1, or the "
+                         "tuned plan's value under --plan-file)")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--hp", type=int, default=None)
     ap.add_argument("--inner", type=int, default=None)
     ap.add_argument("--placement", default=None)
     ap.add_argument("--remat", default=None,
                     help="none|full|scpp|auto (default: model config)")
+    ap.add_argument("--tune", action="store_true",
+                    help="search the plan space for the attached devices "
+                         "before training")
+    ap.add_argument("--plan-file", default=None,
+                    help="TunedPlan JSON: consumed when it exists, "
+                         "written by --tune otherwise")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--smoke", action="store_true",
@@ -67,16 +116,29 @@ def main():
             pc = ParallelConfig(dp=pc.dp, hp=args.hp, cp_outer=cp // inner,
                                 cp_inner=inner,
                                 placement=args.placement or pc.placement)
-        n = pc.num_devices
-        assert len(jax.devices()) >= n, \
-            f"need {n} devices, have {len(jax.devices())}"
         devices = None
         seq, gb = args.seq_len, args.global_batch
 
+    tuned = None
+    grad_accum = args.grad_accum
+    if args.tune or args.plan_file:
+        tuned = resolve_tuned(args, cfg, seq=seq, gb=gb, smoke=args.smoke)
+        pc = tuned.parallel()
+        devices = None
+        if grad_accum is None and gb % tuned.grad_accum:
+            print(f"[train] plan's grad_accum={tuned.grad_accum} does "
+                  f"not divide global_batch={gb}; using 1 "
+                  f"(pass --grad-accum to choose)")
+            grad_accum = 1
+    n = pc.num_devices
+    assert len(jax.devices()) >= n, \
+        f"need {n} devices, have {len(jax.devices())}"
+
     plan = build_plan(cfg, pc, OptConfig(lr=args.lr,
                                          total_steps=args.steps),
-                      devices=devices, grad_accum=args.grad_accum,
-                      remat=args.remat, seq_len=seq, global_batch=gb)
+                      devices=devices, grad_accum=grad_accum,
+                      remat=args.remat, seq_len=seq, global_batch=gb,
+                      tuned=tuned)
     print(plan.describe())
     trainer = Trainer(
         plan, plan.data_config(seq, gb),

@@ -1,0 +1,103 @@
+"""PlanTuner launcher: pick the 2D-Attention configuration automatically.
+
+Enumerates the joint (dp, hp, cp_outer×w, placement, grad_accum, remat,
+ZeRO) space for a model + device count, prunes with the ExecutionPlan
+memory model, ranks with the §4.5 cost model (optionally calibrated
+against this host's microbenchmarks), optionally measures the top-K live,
+and persists the winner as a ``TunedPlan`` JSON that ``build_plan``
+ingests (``launch/train.py --plan-file`` / ``launch/serve.py
+--plan-file``).
+
+    python -m repro.launch.tune --arch qwen3-1.7b \
+        --num-devices 64 --seq-len 131072 --global-batch 64 \
+        [--dp 4] [--budget-gb 16] [--calibrate] [--measure 3] \
+        [--out experiments/tuned/qwen3-1.7b.json] [--top 10]
+
+    python -m repro.launch.tune --arch qwen3-1.7b --smoke
+
+Enumeration and scoring never touch device state, so tuning for a
+64-chip layout works on a laptop; only ``--measure`` needs the devices
+to exist.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+from repro.configs import get_config, get_reduced
+from repro.tune import tune
+from repro.tune.calibrate import calibrate
+
+
+def default_out(arch: str) -> str:
+    return os.path.join("experiments", "tuned", f"{arch}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--num-devices", type=int, default=64)
+    ap.add_argument("--pods", type=int, default=1)
+    ap.add_argument("--dp", type=int, default=None,
+                    help="pin the data-parallel degree (default: sweep)")
+    ap.add_argument("--seq-len", type=int, default=131072)
+    ap.add_argument("--global-batch", type=int, default=64)
+    ap.add_argument("--budget-gb", type=float, default=16.0)
+    ap.add_argument("--calibrate", action="store_true",
+                    help="calibrate cost constants from host "
+                         "microbenchmarks (persisted, reused)")
+    ap.add_argument("--calibration-file", default=None,
+                    help="calibration JSON path (default: "
+                         "experiments/calibration.json)")
+    ap.add_argument("--measure", type=int, default=0, metavar="K",
+                    help="measure the analytic top-K live (needs the "
+                         "devices to actually exist)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--top", type=int, default=5)
+    ap.add_argument("--out", default=None,
+                    help="TunedPlan JSON path (default: "
+                         "experiments/tuned/<arch>.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config, host-sized space (CI smoke)")
+    args = ap.parse_args()
+
+    if args.smoke:
+        import jax
+        cfg = get_reduced(args.arch)
+        n_dev = len(jax.devices())
+        seq, gb, budget = 256, 8, 1.0
+    else:
+        cfg = get_config(args.arch)
+        n_dev = args.num_devices
+        seq, gb, budget = args.seq_len, args.global_batch, args.budget_gb
+
+    const = None
+    if args.calibrate:
+        const = calibrate(args.calibration_file or
+                          os.path.join("experiments", "calibration.json"))
+        print(f"[tune] calibrated constants: {const.source} "
+              f"(peak={const.peak:.3e} FLOP/s, ici={const.ici:.3e} B/s)")
+
+    result = tune(cfg, num_devices=n_dev, seq_len=seq, global_batch=gb,
+                  pods=args.pods, dp=args.dp, memory_budget_gb=budget,
+                  const=const, measure_top_k=args.measure,
+                  arch=args.arch)
+    print(result.table(top=args.top))
+    if not result.ranked:
+        raise SystemExit("[tune] no feasible candidate — raise "
+                         "--budget-gb or change the shape")
+
+    tp = result.tuned_plan(page_size=args.page_size)
+    out = args.out or default_out(args.arch)
+    tp.save(out)
+    print(f"[tune] winner {result.winner.tag} "
+          f"(predicted {tp.predicted_s * 1e3:.2f} ms/step"
+          + (f", measured {tp.measured_s * 1e3:.2f} ms"
+             if tp.measured_s else "")
+          + f") -> {out}")
+    print(f"[tune] consume with: python -m repro.launch.train "
+          f"--arch {args.arch} --plan-file {out}")
+
+
+if __name__ == "__main__":
+    main()

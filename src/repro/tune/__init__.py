@@ -1,0 +1,20 @@
+"""PlanTuner: enumerate → score → measure the 2D-Attention plan space.
+
+The subsystem that makes the paper's §4.4 placement analysis and §4.5
+performance model *executable*: given a model config, a device count and
+a workload shape, it enumerates every feasible ``(dp, hp, cp_outer×w,
+placement, grad_accum, remat, zero)`` point (``space.py``, pruned by the
+``core/plan.py`` memory model), ranks them with the shared cost model
+(``tuner.py`` over ``repro/analysis/cost.py``, constants calibrated by
+``calibrate.py``), optionally measures the top-K live (``measure.py``),
+and persists the winner as a ``TunedPlan`` (``cache.py``) that
+``build_plan(cfg, tuned=...)`` ingests directly.
+
+Entry points: ``python -m repro.launch.tune`` (CLI), ``tune()`` (API),
+``--tune`` / ``--plan-file`` on the train/serve/dryrun launchers.
+"""
+from repro.tune.cache import TunedPlan                          # noqa: F401
+from repro.tune.calibrate import calibrate                      # noqa: F401
+from repro.tune.space import Candidate, enumerate_space         # noqa: F401
+from repro.tune.tuner import (ScoredCandidate, TuneResult,      # noqa: F401
+                              score_candidate, tune)

@@ -1,0 +1,75 @@
+"""TunedPlan: the PlanTuner's serialized winner.
+
+A ``TunedPlan`` is the complete set of knobs ``build_plan`` needs —
+``(dp, hp, cp_outer×cp_inner, placement, grad_accum, remat, zero)`` plus
+the workload shape it was tuned for — together with provenance (score,
+measurement, calibration source, space size).  ``build_plan(cfg,
+tuned=plan)`` rebuilds the exact ExecutionPlan with zero re-search, so
+``launch/train.py --plan-file`` / ``launch/serve.py --plan-file`` start
+from a cached tuning run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+from repro.core.topology import ParallelConfig
+
+TUNED_PLAN_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedPlan:
+    arch: str
+    num_devices: int
+    seq_len: int
+    global_batch: int
+    # parallel layout
+    pods: int = 1
+    dp: int = 1
+    hp: int = 1
+    cp_outer: int = 1
+    cp_inner: int = 1
+    placement: str = "head_first"
+    # execution knobs
+    grad_accum: int = 1
+    remat: str = "scpp"            # resolved policy, never "auto"
+    zero: str = "replica"          # ZERO_MODES name
+    page_size: int = 16            # serve-spec geometry that rode along
+    # provenance
+    predicted_s: float | None = None
+    measured_s: float | None = None
+    calibration: str = "v5e-nominal"
+    space_size: int = 0
+    version: int = TUNED_PLAN_VERSION
+
+    def parallel(self) -> ParallelConfig:
+        return ParallelConfig(dp=self.dp, hp=self.hp,
+                              cp_outer=self.cp_outer,
+                              cp_inner=self.cp_inner, pods=self.pods,
+                              placement=self.placement)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "TunedPlan":
+        d = dict(d)
+        v = d.pop("version", TUNED_PLAN_VERSION)
+        assert v <= TUNED_PLAN_VERSION, f"plan file from the future: v{v}"
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(version=v, **{k: x for k, x in d.items() if k in names})
+
+    def save(self, path: str) -> str:
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "TunedPlan":
+        with open(path) as f:
+            return cls.from_json(json.load(f))

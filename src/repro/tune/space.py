@@ -1,0 +1,168 @@
+"""PlanTuner stage 1: enumerate the joint 2D-Attention configuration space.
+
+The degrees of freedom are the paper's §4.4/§4.5 knobs plus the execution
+knobs the ExecutionPlan layer owns:
+
+* ``(dp, hp, cp_outer, cp_inner)`` — the device split.  DeepSpeed-Ulysses
+  is the ``hp == sp`` corner, Megatron-CP the ``cp == sp`` corner; the
+  paper's 2D points are everything in between.  ``cp_inner`` is the
+  Double-Ring ``w``.
+* ``placement`` — head-first vs context-first (which sub-axis is
+  ICI-minor).
+* ``grad_accum`` / ``remat`` / ``zero`` — microbatching, checkpointing
+  policy, hybrid-ZeRO extent.
+
+``enumerate_space`` applies the *hard* constraints (divisibility, GQA
+head replication, zigzag evenness, batch shardability) statically, then
+prunes the survivors with the existing ``core/plan.py`` memory model
+(``plan_memory`` — the same code ``build_plan`` runs, via its
+device-free path), so no infeasible point ever reaches scoring.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.plan import plan_memory
+from repro.core.topology import ParallelConfig
+
+#: default sweep values; ``enumerate_space`` intersects them with the
+#: hard constraints of the concrete (model, devices, shape) instance.
+DEFAULT_ACCUMS = (1, 2, 4, 8)
+DEFAULT_REMATS = ("none", "scpp", "full")
+DEFAULT_ZEROS = ("replica", "dp", "sp", "dp_sp")
+DEFAULT_PLACEMENTS = ("head_first", "context_first")
+MAX_INNER = 8          # paper's w sweep tops out at 8 (Table 5)
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One point of the search space, with its memory-model verdicts."""
+    pc: ParallelConfig
+    grad_accum: int
+    remat: str              # resolved policy (never "auto")
+    zero: str               # ZERO_MODES name
+    zero_extent: int
+    mem: dict               # plan_memory() output
+
+    @property
+    def tag(self) -> str:
+        p = self.pc
+        return (f"dp{p.dp}.hp{p.hp}.cp{p.cp_outer}x{p.cp_inner}."
+                f"{'hf' if p.placement == 'head_first' else 'cf'}."
+                f"a{self.grad_accum}.{self.remat}.{self.zero}")
+
+
+def _divisors(n: int):
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def hp_choices(cfg, sp: int):
+    """hp values compatible with the attention grid: hp | sp, hp | H_q;
+    below H_kv the KV heads shard over hp (needs H_kv % hp == 0), above
+    it the replication path kicks in (needs hp % H_kv == 0)."""
+    out = []
+    for hp in _divisors(sp):
+        if cfg.n_heads % hp:
+            continue
+        if hp > cfg.n_kv_heads:
+            if hp % cfg.n_kv_heads:
+                continue
+        elif cfg.n_kv_heads % hp:
+            continue
+        out.append(hp)
+    return out
+
+
+def seq_ok(cfg, sp: int, cp: int, seq_len: int) -> bool:
+    """S shards over all sp axes; zigzag additionally needs an even
+    per-cp-rank chunk (the two half-chunks of the balanced layout)."""
+    if seq_len % sp:
+        return False
+    if cp > 1 and cfg.zigzag and (seq_len // cp) % 2:
+        return False
+    return True
+
+
+def enumerate_space(cfg, *, num_devices: int, seq_len: int,
+                    global_batch: int, pods: int = 1,
+                    memory_budget_gb: float = 16.0,
+                    dp: int | None = None,
+                    accums=DEFAULT_ACCUMS, remats=DEFAULT_REMATS,
+                    zeros=DEFAULT_ZEROS, placements=DEFAULT_PLACEMENTS,
+                    max_inner: int = MAX_INNER,
+                    include_infeasible: bool = False):
+    """Yield every feasible :class:`Candidate` for the instance.
+
+    ``dp`` pins the data-parallel degree (the production frame where only
+    the model axis is up for grabs); ``None`` sweeps every divisor.
+    ``include_infeasible`` keeps memory-infeasible points (marked by
+    ``c.mem['fits']``) for inspection; by default they are pruned.
+
+    ZeRO modes that resolve to the same sharding extent on this mesh
+    (e.g. every mode at dp=sp=1) are deduplicated, keeping the first.
+    """
+    assert num_devices % pods == 0, (num_devices, pods)
+    per_pod = num_devices // pods
+    dps = [dp] if dp is not None else _divisors(per_pod)
+    out = []
+    for d in dps:
+        if per_pod % d:
+            continue
+        sp = per_pod // d
+        for hp in hp_choices(cfg, sp):
+            cp = sp // hp
+            if not seq_ok(cfg, sp, cp, seq_len):
+                continue
+            # placement is physically meaningful only on a true 2D grid:
+            # with hp==1 or cp==1 the degenerate axis makes both reshapes
+            # the same device order (head minor when cp==1, inner minor
+            # when hp==1) — enumerate just the canonical one.
+            if cp == 1:
+                pls = [p for p in placements if p == "head_first"] \
+                    or list(placements)[:1]
+            elif hp == 1:
+                pls = [p for p in placements if p == "context_first"] \
+                    or list(placements)[:1]
+            else:
+                pls = list(placements)
+            for w in _divisors(cp):
+                if w > max_inner:
+                    continue
+                pcs = [ParallelConfig(dp=d, hp=hp, cp_outer=cp // w,
+                                      cp_inner=w, pods=pods, placement=pl)
+                       for pl in pls]
+                for pc in pcs:
+                    out.extend(_expand_exec(
+                        cfg, pc, seq_len, global_batch, memory_budget_gb,
+                        accums, remats, zeros, include_infeasible))
+    return out
+
+
+def _expand_exec(cfg, pc, seq_len, global_batch, memory_budget_gb,
+                 accums, remats, zeros, include_infeasible):
+    out = []
+    n_batch_dev = pc.pods * pc.dp
+    seen_extents = set()
+    for zero in zeros:
+        _, _, _, probe = plan_memory(cfg, pc, zero=zero,
+                                     memory_budget_gb=memory_budget_gb)
+        if probe["zero_extent"] in seen_extents:
+            continue              # same extent as an earlier mode: dup
+        seen_extents.add(probe["zero_extent"])
+        for accum in accums:
+            if global_batch % accum:
+                continue
+            if (global_batch // accum) % n_batch_dev:
+                continue          # batch must shard over (pod, data)
+            for remat in remats:
+                policy, zero_mode, _, mem = plan_memory(
+                    cfg, pc, grad_accum=accum, remat=remat, zero=zero,
+                    memory_budget_gb=memory_budget_gb,
+                    seq_len=seq_len, global_batch=global_batch)
+                if not mem["fits"] and not include_infeasible:
+                    continue
+                out.append(Candidate(pc=pc, grad_accum=accum,
+                                     remat=policy, zero=zero_mode,
+                                     zero_extent=mem["zero_extent"],
+                                     mem=mem))
+    return out

@@ -1,0 +1,145 @@
+"""PlanTuner stages 2–3: score the enumerated space, optionally measure.
+
+Stage 2 ranks every feasible :class:`repro.tune.space.Candidate` with the
+shared §4.5 cost model (``repro/analysis/cost.py``): the score is the
+modelled wall seconds of one full train step — attention (overlap model
+over the hp×cp grid and Double-Ring ``w``), linear+remat recompute,
+hybrid-ZeRO collectives, and grad-accum loop overhead.  DeepSpeed-Ulysses
+and Megatron-CP are scored as the corners they are, so the ranking *is*
+the paper's "which placement wins when" analysis, executable.
+
+Stage 3 (optional, ``measure_top_k``) jits and times the top candidates
+live (``repro/tune/measure.py``) and re-ranks them by measured step time.
+
+``tune()`` returns a :class:`TuneResult`; ``result.tuned_plan()`` is the
+serializable winner (``repro/tune/cache.py``) that ``build_plan`` ingests.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.analysis.cost import (AttnCase, CostConstants, V5E,
+                                 train_step_time)
+from repro.tune.cache import TunedPlan
+from repro.tune.space import Candidate, enumerate_space
+
+
+@dataclasses.dataclass(frozen=True)
+class ScoredCandidate:
+    cand: Candidate
+    score_s: float               # analytic step-time prediction
+    terms: dict                  # train_step_time() breakdown
+    measured_s: float | None = None
+
+    @property
+    def tag(self) -> str:
+        return self.cand.tag
+
+
+@dataclasses.dataclass
+class TuneResult:
+    arch: str
+    num_devices: int
+    seq_len: int
+    global_batch: int
+    memory_budget_gb: float
+    const: CostConstants
+    ranked: list                 # ScoredCandidate, best first
+    space_size: int              # feasible points scored
+
+    @property
+    def winner(self) -> ScoredCandidate:
+        assert self.ranked, "no feasible candidate"
+        # measured (when present) outranks predicted
+        measured = [s for s in self.ranked if s.measured_s is not None]
+        if measured:
+            return min(measured, key=lambda s: s.measured_s)
+        return self.ranked[0]
+
+    def tuned_plan(self, *, page_size: int = 16) -> TunedPlan:
+        s = self.winner
+        pc = s.cand.pc
+        return TunedPlan(
+            arch=self.arch, num_devices=self.num_devices,
+            seq_len=self.seq_len, global_batch=self.global_batch,
+            pods=pc.pods, dp=pc.dp, hp=pc.hp, cp_outer=pc.cp_outer,
+            cp_inner=pc.cp_inner, placement=pc.placement,
+            grad_accum=s.cand.grad_accum, remat=s.cand.remat,
+            zero=s.cand.zero, page_size=page_size,
+            predicted_s=s.score_s, measured_s=s.measured_s,
+            calibration=self.const.source, space_size=self.space_size)
+
+    def table(self, top: int = 5) -> str:
+        """The top-K candidate table (dryrun --tune prints this)."""
+        hdr = (f"{'#':>2s} {'dp':>4s} {'hp':>4s} {'cp':>7s} {'pl':>2s} "
+               f"{'accum':>5s} {'remat':>5s} {'zero':>7s} "
+               f"{'pred_ms':>9s} {'attn_ms':>9s} {'meas_ms':>9s} "
+               f"{'mem/dev':>9s}")
+        lines = [f"PlanTuner: {self.arch} seq={self.seq_len} "
+                 f"gb={self.global_batch} on {self.num_devices} devices "
+                 f"({self.space_size} feasible points, "
+                 f"const={self.const.source})", hdr, "-" * len(hdr)]
+        for i, s in enumerate(self.ranked[:top]):
+            pc, mem = s.cand.pc, s.cand.mem
+            meas = f"{s.measured_s * 1e3:9.2f}" if s.measured_s \
+                else f"{'—':>9s}"
+            lines.append(
+                f"{i:2d} {pc.dp:4d} {pc.hp:4d} "
+                f"{pc.cp_outer:3d}x{pc.cp_inner:<3d} "
+                f"{'hf' if pc.placement == 'head_first' else 'cf':>2s} "
+                f"{s.cand.grad_accum:5d} {s.cand.remat:>5s} "
+                f"{s.cand.zero:>7s} {s.score_s * 1e3:9.2f} "
+                f"{s.terms['attn_s'] * 1e3:9.2f} {meas} "
+                f"{mem['total_dev'] / 1e9:8.2f}G")
+        return "\n".join(lines)
+
+
+def score_candidate(cfg, cand: Candidate, *, seq_len: int,
+                    global_batch: int,
+                    const: CostConstants = V5E) -> ScoredCandidate:
+    """Analytic step time of one candidate via the shared cost model."""
+    pc = cand.pc
+    case = AttnCase(s=seq_len, d=cfg.d_model, h=cfg.n_heads,
+                    h_kv=cfg.n_kv_heads, sp=pc.sp, hp=pc.hp,
+                    w=pc.cp_inner, placement=pc.placement)
+    terms = train_step_time(
+        case, d_ff=cfg.d_ff, n_layers=cfg.num_layers, remat=cand.remat,
+        seqs_per_group=global_batch / (pc.pods * pc.dp),
+        n_params=cand.mem["n_params"], zero_extent=cand.zero_extent,
+        grad_accum=cand.grad_accum, const=const)
+    return ScoredCandidate(cand=cand, score_s=terms["total_s"],
+                           terms=terms)
+
+
+def tune(cfg, *, num_devices: int, seq_len: int, global_batch: int,
+         pods: int = 1, memory_budget_gb: float = 16.0,
+         dp: int | None = None, const: CostConstants | None = None,
+         measure_top_k: int = 0, measure_steps: int = 3,
+         arch: str | None = None, **space_kw) -> TuneResult:
+    """Enumerate → score (→ measure) the 2D-Attention plan space.
+
+    Stage 3 runs only when ``measure_top_k > 0`` *and* the candidates fit
+    the actually-attached devices; it times ``measure_steps`` jitted
+    train steps per candidate (see ``repro/tune/measure.py``).
+    """
+    const = const or V5E
+    cands = enumerate_space(cfg, num_devices=num_devices, seq_len=seq_len,
+                            global_batch=global_batch, pods=pods,
+                            memory_budget_gb=memory_budget_gb, dp=dp,
+                            **space_kw)
+    scored = [score_candidate(cfg, c, seq_len=seq_len,
+                              global_batch=global_batch, const=const)
+              for c in cands]
+    # deterministic ranking: score, then prefer fewer moving parts
+    scored.sort(key=lambda s: (s.score_s, s.cand.grad_accum,
+                               s.cand.pc.hp, s.cand.pc.cp_inner,
+                               s.cand.tag))
+    result = TuneResult(arch=arch or cfg.name, num_devices=num_devices,
+                        seq_len=seq_len, global_batch=global_batch,
+                        memory_budget_gb=memory_budget_gb, const=const,
+                        ranked=scored, space_size=len(scored))
+    if measure_top_k > 0 and scored:
+        from repro.tune.measure import measure_top
+        result = measure_top(cfg, result, k=measure_top_k,
+                             steps=measure_steps)
+    return result
