@@ -1,12 +1,14 @@
 #!/usr/bin/env bash
 # Tiered gate.  Run from anywhere:
 #     scripts/check.sh --fast    # tier-1 pytest (single-device tests;
-#                                # dist/slow deselected) + PlanTuner
-#                                # enumerate+score smoke (no measurement)
+#                                # dist/slow deselected) + docs check +
+#                                # PlanTuner enumerate+score smoke
 #     scripts/check.sh           # full: all tests + benches + bench gate +
-#                                # plan/tune smoke + serve smoke
+#                                # plan/tune smoke + serve smoke + packed
+#                                # train smoke
 # The full tier rewrites BENCH_ring.json / BENCH_train_step.json /
-# BENCH_serve.json / BENCH_tune.json and diffs them against the committed
+# BENCH_serve.json / BENCH_tune.json / BENCH_packed.json and diffs them
+# against the committed
 # baselines (scripts/bench_gate.py) so perf regressions on the ring hot
 # path, the (accumulated) train step, the serving engine, and the tuner's
 # picks show up immediately; the dryrun --plan [--tune] invocations fail
@@ -20,19 +22,23 @@ export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${1:-}" == "--fast" ]]; then
     python -m pytest -q -m "not dist and not slow"
+    python scripts/check_docs.py
     python -m repro.launch.tune --arch qwen3-1.7b --smoke \
         --out /tmp/check_tuned_plan.json
     exit 0
 fi
 
 python -m pytest -x -q
+python scripts/check_docs.py
 python benchmarks/run.py ring
 python benchmarks/run.py train
 python benchmarks/run.py serve
 python benchmarks/run.py tune
+python benchmarks/run.py packed
 python scripts/bench_gate.py
 python -m repro.launch.dryrun --plan --arch qwen3-1.7b --shape all
 python -m repro.launch.dryrun --plan --tune --arch qwen3-1.7b \
     --shape train_4k
 python -m repro.launch.serve --arch qwen3-1.7b --smoke \
     --prompt-len 24 --gen 8 --batch 2 --requests 4
+python -m repro.launch.train --arch qwen3-1.7b --smoke --pack --steps 2

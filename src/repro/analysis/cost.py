@@ -77,6 +77,12 @@ class AttnCase:
     w: int = 4             # inner ring size
     placement: str = "head_first"
     causal: bool = True
+    #: packed-document fraction of the causal band that is attendable
+    #: (≈ mean_doc_len / seq_len; Σlᵢ²/S² exactly).  Scales the attention
+    #: FLOPs only — the KV chunks still rotate whole, so packing shifts
+    #: the compute/communication balance the tuner ranks on.  The kernel
+    #: realizes the reduction via doc-aware block skipping.
+    packing: float = 1.0
 
     @property
     def cp(self) -> int:
@@ -95,14 +101,16 @@ class AttnCase:
         assert s is not None, "plan has no seq_len; pass seq_len="
         return cls(s=s, d=cfg.d_model, h=cfg.n_heads,
                    h_kv=cfg.n_kv_heads, sp=pc.sp, hp=pc.hp,
-                   w=pc.cp_inner, placement=pc.placement)
+                   w=pc.cp_inner, placement=pc.placement,
+                   packing=getattr(plan, "packing_frac", 1.0))
 
 
 def attn_flops_per_device(c: AttnCase) -> float:
-    """Useful attention FLOPs per device per layer fwd (causal halved)."""
+    """Useful attention FLOPs per device per layer fwd (causal halved;
+    packed streams scale by the attendable fraction)."""
     full = 4.0 * c.s * c.s * c.d          # QK^T + PV, MACs×2
     if c.causal:
-        full *= 0.5
+        full *= 0.5 * c.packing
     return full / c.sp
 
 

@@ -45,6 +45,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
@@ -149,17 +150,25 @@ def _step_band(cfg: RingConfig, i, j, s_loc: int) -> BandMask:
     return BandMask.uniform((i - j) * s_loc)
 
 
-def _step_fwd(q, kc, vc, o: int, t: int, i_out, i_in, i, cfg: RingConfig):
-    """Partial (out, lse) of local q against the visiting KV chunk pair."""
+def _step_fwd(q, kc, vc, doc, o: int, t: int, i_out, i_in, i,
+              cfg: RingConfig):
+    """Partial (out, lse) of local q against the visiting KV chunk pair.
+
+    ``doc`` (packed documents) is the *local* per-row doc-start table: it
+    is q-side data, so it stays put while KV rotates — the band supplies
+    the visiting chunk's logical positions, and the kernel compares them
+    against the stationary doc starts.  No per-step translation needed.
+    """
     kw = _kw(cfg)
     if not cfg.causal:
         return flash_fwd_chunk(q, kc, vc, causal=False, **kw)
     j = _visiting(cfg, i_out, i_in, o, t)
     return flash_fwd_chunk(q, kc, vc, causal=True, window=cfg.window,
-                           band=_step_band(cfg, i, j, q.shape[1]), **kw)
+                           band=_step_band(cfg, i, j, q.shape[1]),
+                           q_doc_start=doc, **kw)
 
 
-def _ring_fwd(q, k, v, cfg: RingConfig):
+def _ring_fwd(q, k, v, doc, cfg: RingConfig):
     i_out, i_in, i = _ring_indices(cfg)
     acc_o = None
     acc_l = None
@@ -177,7 +186,7 @@ def _ring_fwd(q, k, v, cfg: RingConfig):
             if t < cfg.w - 1:
                 nxt_inner = (_shift(kc, cfg.axis_inner, cfg.w),
                              _shift(vc, cfg.axis_inner, cfg.w))
-            po, pl_ = _step_fwd(q, kc, vc, o, t, i_out, i_in, i, cfg)
+            po, pl_ = _step_fwd(q, kc, vc, doc, o, t, i_out, i_in, i, cfg)
             if acc_o is None:
                 acc_o, acc_l = po.astype(jnp.float32), pl_
             else:
@@ -193,7 +202,7 @@ def _ring_fwd(q, k, v, cfg: RingConfig):
 # Ring backward
 # ---------------------------------------------------------------------------
 
-def _step_bwd(q, kc, vc, out, lse, do, o: int, t: int, i_out, i_in, i,
+def _step_bwd(q, kc, vc, out, lse, do, doc, o: int, t: int, i_out, i_in, i,
               cfg: RingConfig):
     """(dq_part, dk_part, dv_part) for the KV chunk visiting at (o, t).
 
@@ -206,10 +215,11 @@ def _step_bwd(q, kc, vc, out, lse, do, o: int, t: int, i_out, i_in, i,
     j = _visiting(cfg, i_out, i_in, o, t)
     return flash_bwd_chunk(q, kc, vc, out, lse, do, causal=True,
                            window=cfg.window,
-                           band=_step_band(cfg, i, j, q.shape[1]), **kw)
+                           band=_step_band(cfg, i, j, q.shape[1]),
+                           q_doc_start=doc, **kw)
 
 
-def _ring_bwd(q, k, v, out, lse, do, cfg: RingConfig):
+def _ring_bwd(q, k, v, out, lse, do, doc, cfg: RingConfig):
     i_out, i_in, i = _ring_indices(cfg)
     dq = jnp.zeros(q.shape, jnp.float32)
     k0, v0 = k, v
@@ -218,7 +228,7 @@ def _ring_bwd(q, k, v, out, lse, do, cfg: RingConfig):
     for o in range(cfg.n_out):
         kc, vc, dkc, dvc = k0, v0, dk0, dv0
         for t in range(cfg.w):
-            dq_p, dk_p, dv_p = _step_bwd(q, kc, vc, out, lse, do, o, t,
+            dq_p, dk_p, dv_p = _step_bwd(q, kc, vc, out, lse, do, doc, o, t,
                                          i_out, i_in, i, cfg)
             dq = dq + dq_p.astype(jnp.float32)
             dkc = dkc + dk_p.astype(jnp.float32)
@@ -242,24 +252,28 @@ def _ring_bwd(q, k, v, out, lse, do, cfg: RingConfig):
     return dq.astype(q.dtype), dk0.astype(k.dtype), dv0.astype(v.dtype)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
-def ring_attention(q, k, v, cfg: RingConfig):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def ring_attention(q, k, v, doc, cfg: RingConfig):
     """Double-ring zigzag attention over the local (post-AlltoAll) shards.
 
-    q: (b, S/cp, Hq/hp, d);  k/v: (b, S/cp, Hkv_eff/hp, d).
+    q: (b, S/cp, Hq/hp, d);  k/v: (b, S/cp, Hkv_eff/hp, d);
+    doc: None, or the local (b, S/cp) int32 per-row doc-start table
+    (packed documents — integer data, zero cotangent).
     """
-    out, _ = _ring_fwd(q, k, v, cfg)
+    out, _ = _ring_fwd(q, k, v, doc, cfg)
     return out
 
 
-def _ring_vjp_fwd(q, k, v, cfg: RingConfig):
-    out, lse = _ring_fwd(q, k, v, cfg)
-    return out, (q, k, v, out, lse)
+def _ring_vjp_fwd(q, k, v, doc, cfg: RingConfig):
+    out, lse = _ring_fwd(q, k, v, doc, cfg)
+    return out, (q, k, v, doc, out, lse)
 
 
 def _ring_vjp_bwd(cfg: RingConfig, res, do):
-    q, k, v, out, lse = res
-    return _ring_bwd(q, k, v, out, lse, do, cfg)
+    q, k, v, doc, out, lse = res
+    dq, dk, dv = _ring_bwd(q, k, v, out, lse, do, doc, cfg)
+    d_doc = None if doc is None else np.zeros(doc.shape, jax.dtypes.float0)
+    return dq, dk, dv, d_doc
 
 
 ring_attention.defvjp(_ring_vjp_fwd, _ring_vjp_bwd)
@@ -269,14 +283,23 @@ ring_attention.defvjp(_ring_vjp_fwd, _ring_vjp_bwd)
 # SeqAlltoAll + public API
 # ---------------------------------------------------------------------------
 
-def attention_2d_local(q, k, v, cfg: Attn2DConfig):
+def attention_2d_local(q, k, v, cfg: Attn2DConfig, doc_start=None):
     """Per-shard 2D-Attention (call under shard_map).
 
     q: (b, S/d_sp, Hq, d);  k/v: (b, S/d_sp, Hkv, d).  Returns q-shaped out.
+
+    ``doc_start``: local (b, S/d_sp) int32 per-row doc-start table for
+    packed documents.  The SeqAlltoAll redistributes *heads*, so the
+    boundary table has nothing to split — it is all-gathered over the
+    head axis along the sequence dim (int32/token: ~0.25% of one tensor's
+    a2a bytes), after which every cp rank holds the table for exactly the
+    S/d_cp rows its post-AlltoAll q holds.
     """
     b, s_loc, hq, dh = q.shape
     hkv = k.shape[2]
     scale = cfg.scale if cfg.scale is not None else 1.0 / (dh ** 0.5)
+    if doc_start is not None:
+        assert cfg.causal, "packed documents require causal attention"
 
     if cfg.hp > hkv:
         # Paper §4.2: replicate KV heads to d_hp before the SeqAlltoAll.
@@ -290,11 +313,14 @@ def attention_2d_local(q, k, v, cfg: Attn2DConfig):
         q = lax.all_to_all(q, cfg.axis_hp, 2, 1, tiled=True)
         k = lax.all_to_all(k, cfg.axis_hp, 2, 1, tiled=True)
         v = lax.all_to_all(v, cfg.axis_hp, 2, 1, tiled=True)
+        if doc_start is not None:
+            doc_start = lax.all_gather(doc_start, cfg.axis_hp, axis=1,
+                                       tiled=True)
 
     if cfg.cp == 1:
         out = flash_attention(q, k, v, causal=cfg.causal, window=cfg.window,
                               softcap=cfg.softcap, scale=scale,
-                              impl=cfg.impl)
+                              q_doc_start=doc_start, impl=cfg.impl)
     else:
         rcfg = RingConfig(n_out=cfg.n_out, w=cfg.w, causal=cfg.causal,
                           zigzag=cfg.zigzag and cfg.causal,
@@ -302,20 +328,28 @@ def attention_2d_local(q, k, v, cfg: Attn2DConfig):
                           scale=scale, impl=cfg.impl,
                           axis_outer=cfg.axis_outer,
                           axis_inner=cfg.axis_inner)
-        out = ring_attention(q, k, v, rcfg)
+        out = ring_attention(q, k, v, doc_start, rcfg)
 
     if cfg.hp > 1:
         out = lax.all_to_all(out, cfg.axis_hp, 1, 2, tiled=True)
     return out
 
 
-def attention_2d(q, k, v, *, mesh, cfg: Attn2DConfig):
+def attention_2d(q, k, v, *, mesh, cfg: Attn2DConfig, doc_start=None):
     """Global-array 2D-Attention: q (B, S, Hq, d), k/v (B, S, Hkv, d).
 
     B is sharded over the batch axes, S over the sp axes (the zigzag
-    data-layout contract — see data/pipeline.py).
+    data-layout contract — see data/pipeline.py).  ``doc_start``
+    (optional, (B, S) int32): per-token logical document starts in the
+    same physical layout as q — packed-document block-causal masking.
     """
     spec = P(BATCH_AXES, SEQ_AXES, None, None)
-    f = _shard_map(functools.partial(attention_2d_local, cfg=cfg),
-                   mesh, (spec, spec, spec), spec)
-    return f(q, k, v)
+    if doc_start is None:
+        f = _shard_map(functools.partial(attention_2d_local, cfg=cfg),
+                       mesh, (spec, spec, spec), spec)
+        return f(q, k, v)
+    spec_d = P(BATCH_AXES, SEQ_AXES)
+    f = _shard_map(
+        lambda q, k, v, d: attention_2d_local(q, k, v, cfg, doc_start=d),
+        mesh, (spec, spec, spec, spec_d), spec)
+    return f(q, k, v, jnp.asarray(doc_start, jnp.int32))

@@ -204,6 +204,12 @@ class ExecutionPlan:
     #: workload shape the memory model used (None when not supplied)
     seq_len: int | None = None
     global_batch: int | None = None
+    #: packed-document training: batches carry a doc_start boundary table
+    #: and attention is block-causal per document
+    packed: bool = False
+    #: expected mean document length of the packed stream (the cost
+    #: model's ``packing`` term; None => seq_len, i.e. no packing win)
+    mean_doc_len: int | None = None
     mem: dict = dataclasses.field(default_factory=dict)
 
     # -- sharding factories -------------------------------------------------
@@ -247,9 +253,20 @@ class ExecutionPlan:
                          paged_bytes_per_token=per_tok,
                          window_bytes=win_bytes)
 
+    @property
+    def packing_frac(self) -> float:
+        """Fraction of the full causal band a packed stream attends
+        (≈ mean_doc_len / seq_len) — the §4.5 cost model's ``packing``
+        term.  1.0 when not packed (or shapes unknown)."""
+        if not self.packed or not self.seq_len:
+            return 1.0
+        mean = self.mean_doc_len or self.seq_len
+        return min(1.0, max(mean / self.seq_len, 1e-6))
+
     def batch_shardings(self, kind: str = "train"):
         """NamedShardings for a step's batch dict.  Train batches carry a
-        leading (replicated) accumulation axis when ``grad_accum > 1``."""
+        leading (replicated) accumulation axis when ``grad_accum > 1``;
+        packed plans add the ``doc_start`` boundary table (token-like)."""
         mesh, rt = self.mesh, self.rt
         lead = (None,) if kind == "train" and self.grad_accum > 1 else ()
         if kind == "decode":
@@ -258,6 +275,8 @@ class ExecutionPlan:
         out = {"tokens": tok}
         if kind == "train":
             out["labels"] = out["positions"] = tok
+            if self.packed:
+                out["doc_start"] = tok
         if self.cfg.family == "encdec":
             out["frames"] = NamedSharding(
                 mesh, P(*lead, rt.batch_axes, SEQ_AXES, None))
@@ -276,14 +295,28 @@ class ExecutionPlan:
                     zigzag: bool | None = None, **kw):
         """DataConfig consistent with this plan (cp, zigzag layout,
         microbatch grid) — the loader-side §4.4 post-processing.
-        ``zigzag`` defaults to the plan's model-family decision."""
+        ``zigzag`` defaults to the plan's model-family decision.  Packed
+        plans fill ``doc_len_range`` around ``mean_doc_len``."""
         from repro.data.pipeline import DataConfig
         cfg = self.cfg
         if zigzag is None:
             zigzag = cfg.zigzag and cfg.family in ("dense", "moe", "encdec")
+        if self.packed and "doc_len_range" not in kw \
+                and self.mean_doc_len is not None:
+            # clamp: a plan tuned for a longer sequence may be reused at
+            # a shorter one (resolve_tuned permits it with a note)
+            m = min(self.mean_doc_len, seq_len)
+            kw["doc_len_range"] = (max(2, m // 2), min(seq_len, 2 * m))
         return DataConfig(vocab=cfg.vocab, seq_len=seq_len,
                           global_batch=global_batch, cp=self.pc.cp,
                           zigzag=zigzag, grad_accum=self.grad_accum, **kw)
+
+    def data_source(self, seq_len: int, global_batch: int, **kw):
+        """The plan's data source: ``PackedLM`` for packed plans,
+        ``SyntheticLM`` otherwise."""
+        from repro.data.pipeline import PackedLM, SyntheticLM
+        src = PackedLM if self.packed else SyntheticLM
+        return src(self.data_config(seq_len, global_batch, **kw), self.cfg)
 
     # -- reporting ----------------------------------------------------------
 
@@ -318,6 +351,9 @@ class ExecutionPlan:
             f"microbatch={m.get('microbatch')}",
             f"  attention   impl={self.rt.impl} zigzag={cfg.zigzag} "
             f"hp={pc.hp}×cp={pc.cp} 2D grid",
+            f"  packing     {'on' if self.packed else 'off'}"
+            + (f" mean_doc={self.mean_doc_len} "
+               f"frac={self.packing_frac:.3f}" if self.packed else ""),
             f"  remat       {cfg.remat}",
             f"  zero        mode={self.zero_mode} "
             f"extent={m.get('zero_extent', 1)} "
@@ -434,6 +470,8 @@ def build_plan(cfg, pc: ParallelConfig | None = None, opt=None, *,
                include_pod: bool = False,
                seq_len: int | None = None,
                global_batch: int | None = None,
+               packed: bool = False,
+               mean_doc_len: int | None = None,
                tuned=None) -> ExecutionPlan:
     """Build the ExecutionPlan — the only place these decisions are made.
 
@@ -445,6 +483,10 @@ def build_plan(cfg, pc: ParallelConfig | None = None, opt=None, *,
       an explicit policy overrides.
     * ``zero`` — ``None``/``"auto"`` picks the AMSP mode from the memory
       model; or force ``replica | dp | sp | dp_sp | pod_dp_sp``.
+    * ``packed`` — packed-document training (``PackedLM`` batches with a
+      ``doc_start`` boundary table, block-causal attention masking);
+      attention families only.  ``mean_doc_len`` feeds the cost model's
+      packing term and the data source's document-length range.
     * ``tuned`` — a ``repro.tune.TunedPlan`` (or any object with its
       fields): fills every knob the caller left unset (``None``) —
       ``pc``, ``grad_accum``, ``zero``, ``remat``, ``seq_len``,
@@ -474,6 +516,10 @@ def build_plan(cfg, pc: ParallelConfig | None = None, opt=None, *,
     pc = pc or ParallelConfig()
     opt = opt or OptConfig()
     pc.validate()
+    if packed:
+        assert cfg.family in ("dense", "moe"), \
+            f"packed training needs an attention family, got {cfg.family} " \
+            "(SSM state has no per-document reset)"
 
     mesh = refine_mesh(base_mesh, pc) if base_mesh is not None \
         else make_mesh(pc, devices=devices)
@@ -494,4 +540,5 @@ def build_plan(cfg, pc: ParallelConfig | None = None, opt=None, *,
                          zero_groups=groups,
                          memory_budget=memory_budget_gb * 1e9,
                          seq_len=seq_len, global_batch=global_batch,
+                         packed=packed, mean_doc_len=mean_doc_len,
                          mem=mem)

@@ -1,14 +1,24 @@
-"""Deterministic synthetic data pipeline with zigzag context reordering.
+"""Deterministic synthetic data pipelines with zigzag context reordering.
+
+Two sources share one batch contract:
+
+* ``SyntheticLM`` — one document per sequence (the original stream);
+* ``PackedLM`` — variable-length documents bin-packed into the sequence
+  window, emitting per-token ``doc_start`` boundary tables (block-causal
+  masking through the 2D-Attention stack) plus host-side
+  ``boundaries()``/``segments()``/``documents()`` views.
 
 The paper's context-first placement requires "a post-processing function
 within the data loader to adjust input sequence placement at the start of
-each batch" (§4.4) — that function is ``_layout``: the token/label/position
-arrays are permuted into the zigzag physical layout once per batch, on the
-host, so no on-the-fly device data movement is needed.
+each batch" (§4.4) — that function is ``_apply_layout``: every per-token
+array (tokens/labels/positions, and ``doc_start`` for packed batches) is
+permuted into the zigzag physical layout once per batch, on the host, so
+no on-the-fly device data movement is needed.
 
 Determinism: batch ``i`` depends only on (seed, i) — restart-after-failure
 resumes mid-epoch by step index alone (runtime/checkpoint.py stores the
-step).
+step); packed document content additionally keys on the document id, so
+packing placement never changes a document's bytes.
 """
 from __future__ import annotations
 
@@ -31,6 +41,18 @@ class DataConfig:
                                # shaped (accum, global_batch//accum, ...)
     seed: int = 0
     pad_frac: float = 0.0      # fraction of tail tokens padded (-1 labels)
+    #: PackedLM: (min, max) document length, inclusive; None defaults to
+    #: (max(8, seq_len // 8), seq_len) — a mixed-length stream
+    doc_len_range: tuple | None = None
+
+
+def _apply_layout(arr, perm, accum: int):
+    """Zigzag data-loader permutation (seq axis), then the microbatch
+    split: (B, S, ...) -> (accum, B // accum, S, ...)."""
+    arr = arr[:, perm]
+    if accum > 1:
+        arr = arr.reshape((accum, arr.shape[0] // accum) + arr.shape[1:])
+    return arr
 
 
 class SyntheticLM:
@@ -53,13 +75,7 @@ class SyntheticLM:
             self._perm = np.arange(s)
 
     def _layout(self, arr):
-        """Zigzag data-loader permutation (seq axis), then the microbatch
-        split: (B, S, ...) -> (accum, B // accum, S, ...)."""
-        arr = arr[:, self._perm]
-        a = self.cfg.grad_accum
-        if a > 1:
-            arr = arr.reshape((a, arr.shape[0] // a) + arr.shape[1:])
-        return arr
+        return _apply_layout(arr, self._perm, self.cfg.grad_accum)
 
     def batch(self, step: int) -> dict:
         cfg = self.cfg
@@ -96,3 +112,145 @@ class SyntheticLM:
                 frames = frames.reshape((a, b // a) + frames.shape[1:])
             out["frames"] = frames
         return out
+
+
+def _doc_stream(vocab: int, length: int, rng) -> np.ndarray:
+    """One document: the same learnable affine-map-with-noise stream as
+    SyntheticLM, restarted per document (so any cross-document attention
+    leak shows up as a loss/grad mismatch, not a wash)."""
+    stream = np.empty(length, dtype=np.int64)
+    stream[0] = rng.integers(1, vocab)
+    noise = rng.random(length) < 0.1
+    noise_tok = rng.integers(1, vocab, size=length)
+    for t in range(length - 1):
+        nxt = (stream[t] * 31 + 7) % (vocab - 1) + 1
+        stream[t + 1] = noise_tok[t] if noise[t] else nxt
+    return stream.astype(np.int32)
+
+
+class PackedLM:
+    """Packed-document corpus: variable-length synthetic documents
+    bin-packed into fixed ``(accum, microbatch, seq)`` batches.
+
+    Every batch leaf gets the same zigzag layout + microbatch split as
+    ``SyntheticLM``; in addition each batch carries ``doc_start`` — the
+    per-token table of logical document start positions that drives
+    block-causal (per-document) masking through the 2D-Attention stack
+    (see ``kernels/ref.py::BandMask`` and ``core/attention2d.py``).
+
+    Packing is deterministic per ``(seed, step)``: document lengths are
+    drawn from ``cfg.doc_len_range``, then first-fit-decreasing packed
+    into ``global_batch`` bins of ``seq_len`` tokens; bins' tail gaps are
+    padded (label ``-1``, doc_start = the gap's own start, so pad tokens
+    attend only one another and train nothing).  Per-document content is
+    seeded by ``(seed, step, doc_id)`` so a document's tokens do not
+    depend on where packing placed it.
+
+    Labels are next-token *within* each document — the last token of a
+    document never predicts the next document's first token.  Positions
+    restart at 0 per document (rotary phases match an unpacked run).
+    """
+
+    def __init__(self, cfg: DataConfig, model_cfg: ModelConfig | None = None):
+        assert cfg.global_batch % cfg.grad_accum == 0, \
+            (cfg.global_batch, cfg.grad_accum)
+        assert model_cfg is None or model_cfg.family != "encdec", \
+            "packing is a decoder-LM feature"
+        self.cfg = cfg
+        self.model_cfg = model_cfg
+        s, cp = cfg.seq_len, cfg.cp
+        if cfg.zigzag and cp > 1:
+            self._perm = zigzag_indices(s, cp)
+        else:
+            self._perm = np.arange(s)
+        lo, hi = cfg.doc_len_range or (max(8, s // 8), s)
+        assert 2 <= lo <= hi <= s, (lo, hi, s)
+        self._range = (int(lo), int(hi))
+        # one-entry caches: batch()/boundaries()/segments() are different
+        # views of the same step's document set — the O(B·S) host-side
+        # generation runs once per step, not once per view
+        self._docs_cache: tuple[int, list] | None = None
+        self._asm_cache: tuple[int, tuple] | None = None
+
+    def documents(self, step: int) -> list[list[dict]]:
+        """The step's bin-packed document set, in logical order: one list
+        per sequence of ``{"start", "tokens", "labels", "positions"}``
+        (the per-sequence document-boundary table, with content)."""
+        if self._docs_cache is not None and self._docs_cache[0] == step:
+            return self._docs_cache[1]
+        cfg = self.cfg
+        b, s = cfg.global_batch, cfg.seq_len
+        lo, hi = self._range
+        rng = np.random.default_rng((cfg.seed, step, 91))
+        lens = []
+        while sum(lens) < b * s:               # over-draw the pool
+            lens.append(int(rng.integers(lo, hi + 1)))
+        order = sorted(range(len(lens)), key=lambda i: -lens[i])
+        bins: list[list[int]] = [[] for _ in range(b)]
+        space = [s] * b
+        for idx in order:                      # first-fit-decreasing
+            for bi in range(b):
+                if space[bi] >= lens[idx]:
+                    bins[bi].append(idx)
+                    space[bi] -= lens[idx]
+                    break
+        out = []
+        for bi in range(b):
+            docs, start = [], 0
+            for idx in bins[bi]:
+                l = lens[idx]
+                crng = np.random.default_rng((cfg.seed, step, 7, idx))
+                tokens = _doc_stream(cfg.vocab, l, crng)
+                labels = np.concatenate(
+                    [tokens[1:], np.full(1, -1, np.int32)])
+                docs.append({"start": start, "tokens": tokens,
+                             "labels": labels,
+                             "positions": np.arange(l, dtype=np.int32)})
+                start += l
+            out.append(docs)
+        self._docs_cache = (step, out)
+        return out
+
+    def boundaries(self, step: int) -> list[list[tuple[int, int]]]:
+        """Per-sequence ``(start, length)`` document-boundary table."""
+        return [[(d["start"], len(d["tokens"])) for d in docs]
+                for docs in self.documents(step)]
+
+    def _assemble(self, step: int):
+        """Logical-order (B, S) arrays before layout."""
+        if self._asm_cache is not None and self._asm_cache[0] == step:
+            return self._asm_cache[1]
+        cfg = self.cfg
+        b, s = cfg.global_batch, cfg.seq_len
+        tokens = np.zeros((b, s), np.int32)
+        labels = np.full((b, s), -1, np.int32)
+        positions = np.zeros((b, s), np.int32)
+        doc_start = np.zeros((b, s), np.int32)
+        segments = np.full((b, s), -1, np.int32)
+        for bi, docs in enumerate(self.documents(step)):
+            end = 0
+            for di, d in enumerate(docs):
+                s0, l = d["start"], len(d["tokens"])
+                tokens[bi, s0:s0 + l] = d["tokens"]
+                labels[bi, s0:s0 + l] = d["labels"]
+                positions[bi, s0:s0 + l] = d["positions"]
+                doc_start[bi, s0:s0 + l] = s0
+                segments[bi, s0:s0 + l] = di
+                end = s0 + l
+            doc_start[bi, end:] = end          # tail pad: its own document
+        out = (tokens, labels, positions, doc_start, segments)
+        self._asm_cache = (step, out)
+        return out
+
+    def segments(self, step: int) -> np.ndarray:
+        """(B, S) int32 per-token segment (document) ids in logical
+        order; ``-1`` marks pad slots."""
+        return self._assemble(step)[4]
+
+    def batch(self, step: int) -> dict:
+        tokens, labels, positions, doc_start, _ = self._assemble(step)
+        a = self.cfg.grad_accum
+        return {"tokens": _apply_layout(tokens, self._perm, a),
+                "labels": _apply_layout(labels, self._perm, a),
+                "positions": _apply_layout(positions, self._perm, a),
+                "doc_start": _apply_layout(doc_start, self._perm, a)}

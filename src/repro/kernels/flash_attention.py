@@ -20,6 +20,12 @@ TPU-native adaptation of FlashAttention-2 for the LoongTrain reproduction:
   group into its (sequential) innermost grid dimension and accumulates the
   group-summed gradients in VMEM scratch, so replicated KV is never
   materialized anywhere.
+* **Packed documents** (``FlashParams.packed``): a per-q-row int32
+  doc-start table arrives as one more blocked ``(1, block_q)`` VMEM
+  operand (shared by all folded heads of a sequence); keys below a row's
+  document start are masked, and K blocks entirely below a q block's
+  first-row doc start are *skipped* at grid level (``doc_skip``).  The
+  full contract is written down in docs/KERNELS.md.
 
 Validated on CPU with ``interpret=True`` against ``ref.py`` (see
 ``tests/test_kernels.py``).  On real TPUs set ``interpret=False``.
@@ -31,6 +37,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -59,6 +66,13 @@ class FlashParams(NamedTuple):
     delta: int = 0         # default causal anchor: full Lk - Lq (the oracle
                            # anchors bottom-right at the full key length;
                            # kv_valid_len only cuts, it does not re-anchor)
+    packed: bool = False   # packed documents: a per-q-row doc-start table
+                           # (logical positions) arrives as one more blocked
+                           # operand; keys before a row's doc start are
+                           # masked (block-causal within each document)
+    doc_skip: bool = True  # skip K blocks entirely below the q block's doc
+                           # start (False: mask in-tile only — the dense-
+                           # masked baseline the packing bench compares to)
 
 
 def _default_band(p: FlashParams) -> jax.Array:
@@ -76,10 +90,17 @@ def _k_log(c, band_ref, p: FlashParams):
     return _logical_pos(c, band_ref[2], band_ref[3], p.k_seg)
 
 
-def _run_predicate(q_start, k_start, band_ref, p: FlashParams):
+def _run_predicate(q_start, k_start, band_ref, p: FlashParams,
+                   doc_ref=None):
     """Whole-block skip test.  Logical positions are nondecreasing in the
     physical index (the BandMask contract), so block extrema sit at the
-    block edges even when a block straddles the segment boundary."""
+    block edges even when a block straddles the segment boundary.
+
+    Packed documents add a second skip direction: the doc-start table is
+    nondecreasing in the physical q row (documents are contiguous logical
+    intervals and rows are logically ordered), so the q block's smallest
+    doc start sits at its first row; K blocks whose last logical position
+    is below it are entirely cross-document and skipped."""
     run = k_start < band_ref[4]
     if p.causal:
         run = jnp.logical_and(
@@ -91,10 +112,14 @@ def _run_predicate(q_start, k_start, band_ref, p: FlashParams):
             run,
             _k_log(k_start + p.block_k - 1, band_ref, p)
             >= _q_log(q_start, band_ref, p) - (p.window - 1))
+    if p.packed and p.doc_skip:
+        run = jnp.logical_and(
+            run,
+            _k_log(k_start + p.block_k - 1, band_ref, p) >= doc_ref[0, 0])
     return run
 
 
-def _tile_mask(q_start, k_start, band_ref, p: FlashParams):
+def _tile_mask(q_start, k_start, band_ref, p: FlashParams, doc_ref=None):
     """Elementwise (block_q, block_k) visibility mask."""
     qi = q_start + jax.lax.broadcasted_iota(
         jnp.int32, (p.block_q, p.block_k), 0)
@@ -106,6 +131,8 @@ def _tile_mask(q_start, k_start, band_ref, p: FlashParams):
         k_log = _k_log(kj, band_ref, p)
         if p.causal:
             mask &= k_log <= q_log
+        if p.packed:
+            mask &= k_log >= doc_ref[0][:, None]
         if p.window is not None:
             mask &= k_log >= q_log - (p.window - 1)
     return mask
@@ -115,8 +142,12 @@ def _tile_mask(q_start, k_start, band_ref, p: FlashParams):
 # Forward
 # ---------------------------------------------------------------------------
 
-def _fwd_kernel(band_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
-                acc_ref, m_ref, l_ref, *, p: FlashParams, nk: int):
+def _fwd_kernel(band_ref, *refs, p: FlashParams, nk: int):
+    if p.packed:
+        q_ref, k_ref, v_ref, doc_ref = refs[:4]
+    else:
+        (q_ref, k_ref, v_ref), doc_ref = refs[:3], None
+    o_ref, lse_ref, acc_ref, m_ref, l_ref = refs[-5:]
     iq = pl.program_id(1)
     jk = pl.program_id(2)
 
@@ -129,7 +160,7 @@ def _fwd_kernel(band_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
     q_start = iq * p.block_q
     k_start = jk * p.block_k
 
-    @pl.when(_run_predicate(q_start, k_start, band_ref, p))
+    @pl.when(_run_predicate(q_start, k_start, band_ref, p, doc_ref))
     def _compute():
         q = q_ref[0].astype(jnp.float32)            # (bq, d)
         k = k_ref[0].astype(jnp.float32)            # (bk, d)
@@ -139,7 +170,7 @@ def _fwd_kernel(band_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
         if p.softcap:
             s = p.softcap * jnp.tanh(s / p.softcap)
 
-        mask = _tile_mask(q_start, k_start, band_ref, p)
+        mask = _tile_mask(q_start, k_start, band_ref, p, doc_ref)
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_ref[...]
@@ -169,17 +200,21 @@ def _fwd_kernel(band_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
         lse_ref[0] = jnp.where(l == 0.0, NEG_INF, shift + jnp.log(l_safe))
 
 
-def _fwd(q, k, v, p: FlashParams, band=None):
+def _fwd(q, k, v, p: FlashParams, band=None, doc=None):
     """q: (B*Hq, Lq, D); k/v: (B*Hkv, Lk, D), heads folded major-to-minor.
 
     GQA is handled in the K/V index maps (kv row = q row // group), so the
     replicated KV is never materialized.  ``band``: optional int32 (5,)
     scalar-prefetch vector (see module docstring); defaults to the static
-    bottom-right band.  Returns out (BH, Lq, D), lse (BH, Lq) fp32.
+    bottom-right band.  ``doc``: optional (B, Lq) int32 per-row doc-start
+    table (``p.packed`` must be set) — blocked over q, shared across the
+    folded heads of each sequence.  Returns out (BH, Lq, D),
+    lse (BH, Lq) fp32.
     """
     bh, lq, d = q.shape
     bhkv, lk, _ = k.shape
     assert bh % bhkv == 0, (bh, bhkv)
+    assert (doc is not None) == p.packed, (doc is None, p.packed)
     group = bh // bhkv
     nq = lq // p.block_q
     nk = lk // p.block_k
@@ -187,16 +222,23 @@ def _fwd(q, k, v, p: FlashParams, band=None):
         band = _default_band(p)
 
     kernel = functools.partial(_fwd_kernel, p=p, nk=nk)
+    in_specs = [
+        pl.BlockSpec((1, p.block_q, d), lambda b, i, j, s: (b, i, 0)),
+        pl.BlockSpec((1, p.block_k, d),
+                     lambda b, i, j, s: (b // group, j, 0)),
+        pl.BlockSpec((1, p.block_k, d),
+                     lambda b, i, j, s: (b // group, j, 0)),
+    ]
+    operands = (q, k, v)
+    if p.packed:
+        q_mult = bh // doc.shape[0]
+        in_specs.append(pl.BlockSpec(
+            (1, p.block_q), lambda b, i, j, s: (b // q_mult, i)))
+        operands = (q, k, v, doc)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(bh, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, p.block_q, d), lambda b, i, j, s: (b, i, 0)),
-            pl.BlockSpec((1, p.block_k, d),
-                         lambda b, i, j, s: (b // group, j, 0)),
-            pl.BlockSpec((1, p.block_k, d),
-                         lambda b, i, j, s: (b // group, j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, p.block_q, d), lambda b, i, j, s: (b, i, 0)),
             pl.BlockSpec((1, p.block_q), lambda b, i, j, s: (b, i)),
@@ -217,7 +259,7 @@ def _fwd(q, k, v, p: FlashParams, band=None):
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=p.interpret,
-    )(band, q, k, v)
+    )(band, *operands)
     return out, lse
 
 
@@ -225,12 +267,13 @@ def _fwd(q, k, v, p: FlashParams, band=None):
 # Backward
 # ---------------------------------------------------------------------------
 
-def _recompute_p(q, k, q_start, k_start, band_ref, p: FlashParams):
+def _recompute_p(q, k, q_start, k_start, band_ref, p: FlashParams,
+                 doc_ref=None):
     """Recompute softcapped+masked scores; returns (s_capped, mask, s_raw)."""
     s_raw = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * p.scale
     s = p.softcap * jnp.tanh(s_raw / p.softcap) if p.softcap else s_raw
-    mask = _tile_mask(q_start, k_start, band_ref, p)
+    mask = _tile_mask(q_start, k_start, band_ref, p, doc_ref)
     return s, mask, s_raw
 
 
@@ -243,8 +286,13 @@ def _ds_from_dp(dp, pmat, s_capped, s_raw, p: FlashParams):
     return ds * p.scale
 
 
-def _dq_kernel(band_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref,
-               dq_ref, dq_acc, *, p: FlashParams, nk: int):
+def _dq_kernel(band_ref, *refs, p: FlashParams, nk: int):
+    if p.packed:
+        q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref, doc_ref = refs[:7]
+    else:
+        q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref = refs[:6]
+        doc_ref = None
+    dq_ref, dq_acc = refs[-2:]
     iq = pl.program_id(1)
     jk = pl.program_id(2)
 
@@ -255,7 +303,7 @@ def _dq_kernel(band_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref,
     q_start = iq * p.block_q
     k_start = jk * p.block_k
 
-    @pl.when(_run_predicate(q_start, k_start, band_ref, p))
+    @pl.when(_run_predicate(q_start, k_start, band_ref, p, doc_ref))
     def _compute():
         q = q_ref[0].astype(jnp.float32)
         k = k_ref[0].astype(jnp.float32)
@@ -264,7 +312,8 @@ def _dq_kernel(band_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref,
         lse = lse_ref[0]
         dsum = dsum_ref[0]
 
-        s, mask, s_raw = _recompute_p(q, k, q_start, k_start, band_ref, p)
+        s, mask, s_raw = _recompute_p(q, k, q_start, k_start, band_ref, p,
+                                      doc_ref)
         shift = jnp.where(lse <= NEG_INF / 2, 0.0, lse)
         pmat = jnp.where(mask, jnp.exp(s - shift[:, None]), 0.0)
         dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
@@ -279,13 +328,17 @@ def _dq_kernel(band_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref,
         dq_ref[0] = dq_acc[...].astype(dq_ref.dtype)
 
 
-def _dkv_kernel(band_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref,
-                dk_ref, dv_ref, dk_acc, dv_acc,
-                *, p: FlashParams, nq: int, group: int):
+def _dkv_kernel(band_ref, *refs, p: FlashParams, nq: int, group: int):
     """dk/dv for one KV head.  The innermost (sequential) grid dimension
     runs over ``group * nq`` steps — all q blocks of every query head in
     this KV head's group — so the group-summed gradients accumulate in the
     VMEM scratch without ever materializing group-expanded K/V."""
+    if p.packed:
+        q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref, doc_ref = refs[:7]
+    else:
+        q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref = refs[:6]
+        doc_ref = None
+    dk_ref, dv_ref, dk_acc, dv_acc = refs[-4:]
     jk = pl.program_id(1)
     ig = pl.program_id(2)            # ig = g * nq + iq
 
@@ -297,7 +350,7 @@ def _dkv_kernel(band_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref,
     q_start = jax.lax.rem(ig, nq) * p.block_q
     k_start = jk * p.block_k
 
-    @pl.when(_run_predicate(q_start, k_start, band_ref, p))
+    @pl.when(_run_predicate(q_start, k_start, band_ref, p, doc_ref))
     def _compute():
         q = q_ref[0].astype(jnp.float32)
         k = k_ref[0].astype(jnp.float32)
@@ -306,7 +359,8 @@ def _dkv_kernel(band_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref,
         lse = lse_ref[0]
         dsum = dsum_ref[0]
 
-        s, mask, s_raw = _recompute_p(q, k, q_start, k_start, band_ref, p)
+        s, mask, s_raw = _recompute_p(q, k, q_start, k_start, band_ref, p,
+                                      doc_ref)
         shift = jnp.where(lse <= NEG_INF / 2, 0.0, lse)
         pmat = jnp.where(mask, jnp.exp(s - shift[:, None]), 0.0)
         dv_acc[...] += jax.lax.dot_general(
@@ -325,12 +379,13 @@ def _dkv_kernel(band_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref,
         dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
 
 
-def _bwd(q, k, v, out, lse, do, p: FlashParams, band=None):
+def _bwd(q, k, v, out, lse, do, p: FlashParams, band=None, doc=None):
     """Backward in the folded layout.  k/v may have fewer (KV) heads than
     q (GQA); dk/dv come back at the KV head count, group-summed."""
     bh, lq, d = q.shape
     bhkv, lk, _ = k.shape
     assert bh % bhkv == 0, (bh, bhkv)
+    assert (doc is not None) == p.packed, (doc is None, p.packed)
     group = bh // bhkv
     nq = lq // p.block_q
     nk = lk // p.block_k
@@ -339,19 +394,26 @@ def _bwd(q, k, v, out, lse, do, p: FlashParams, band=None):
     dsum = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32),
                    axis=-1)  # (BH, Lq)
 
+    dq_in_specs = [
+        pl.BlockSpec((1, p.block_q, d), lambda b, i, j, s: (b, i, 0)),
+        pl.BlockSpec((1, p.block_k, d),
+                     lambda b, i, j, s: (b // group, j, 0)),
+        pl.BlockSpec((1, p.block_k, d),
+                     lambda b, i, j, s: (b // group, j, 0)),
+        pl.BlockSpec((1, p.block_q, d), lambda b, i, j, s: (b, i, 0)),
+        pl.BlockSpec((1, p.block_q), lambda b, i, j, s: (b, i)),
+        pl.BlockSpec((1, p.block_q), lambda b, i, j, s: (b, i)),
+    ]
+    operands = (q, k, v, do, lse, dsum)
+    if p.packed:
+        q_mult = bh // doc.shape[0]
+        dq_in_specs.append(pl.BlockSpec(
+            (1, p.block_q), lambda b, i, j, s: (b // q_mult, i)))
+        operands = operands + (doc,)
     dq_grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(bh, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, p.block_q, d), lambda b, i, j, s: (b, i, 0)),
-            pl.BlockSpec((1, p.block_k, d),
-                         lambda b, i, j, s: (b // group, j, 0)),
-            pl.BlockSpec((1, p.block_k, d),
-                         lambda b, i, j, s: (b // group, j, 0)),
-            pl.BlockSpec((1, p.block_q, d), lambda b, i, j, s: (b, i, 0)),
-            pl.BlockSpec((1, p.block_q), lambda b, i, j, s: (b, i)),
-            pl.BlockSpec((1, p.block_q), lambda b, i, j, s: (b, i)),
-        ],
+        in_specs=dq_in_specs,
         out_specs=pl.BlockSpec((1, p.block_q, d),
                                lambda b, i, j, s: (b, i, 0)),
         scratch_shapes=[pltpu.VMEM((p.block_q, d), jnp.float32)],
@@ -363,27 +425,33 @@ def _bwd(q, k, v, out, lse, do, p: FlashParams, band=None):
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=p.interpret,
-    )(band, q, k, v, do, lse, dsum)
+    )(band, *operands)
 
     # Query-side operands walk b*group + ig//nq: for a fixed KV head, the
     # sequential dimension visits each group member's q blocks in turn.
+    dkv_in_specs = [
+        pl.BlockSpec((1, p.block_q, d),
+                     lambda b, j, g, s: (b * group + g // nq,
+                                         g % nq, 0)),
+        pl.BlockSpec((1, p.block_k, d), lambda b, j, g, s: (b, j, 0)),
+        pl.BlockSpec((1, p.block_k, d), lambda b, j, g, s: (b, j, 0)),
+        pl.BlockSpec((1, p.block_q, d),
+                     lambda b, j, g, s: (b * group + g // nq,
+                                         g % nq, 0)),
+        pl.BlockSpec((1, p.block_q),
+                     lambda b, j, g, s: (b * group + g // nq, g % nq)),
+        pl.BlockSpec((1, p.block_q),
+                     lambda b, j, g, s: (b * group + g // nq, g % nq)),
+    ]
+    if p.packed:
+        q_mult = bh // doc.shape[0]
+        dkv_in_specs.append(pl.BlockSpec(
+            (1, p.block_q),
+            lambda b, j, g, s: ((b * group + g // nq) // q_mult, g % nq)))
     dkv_grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(bhkv, nk, group * nq),
-        in_specs=[
-            pl.BlockSpec((1, p.block_q, d),
-                         lambda b, j, g, s: (b * group + g // nq,
-                                             g % nq, 0)),
-            pl.BlockSpec((1, p.block_k, d), lambda b, j, g, s: (b, j, 0)),
-            pl.BlockSpec((1, p.block_k, d), lambda b, j, g, s: (b, j, 0)),
-            pl.BlockSpec((1, p.block_q, d),
-                         lambda b, j, g, s: (b * group + g // nq,
-                                             g % nq, 0)),
-            pl.BlockSpec((1, p.block_q),
-                         lambda b, j, g, s: (b * group + g // nq, g % nq)),
-            pl.BlockSpec((1, p.block_q),
-                         lambda b, j, g, s: (b * group + g // nq, g % nq)),
-        ],
+        in_specs=dkv_in_specs,
         out_specs=[
             pl.BlockSpec((1, p.block_k, d), lambda b, j, g, s: (b, j, 0)),
             pl.BlockSpec((1, p.block_k, d), lambda b, j, g, s: (b, j, 0)),
@@ -403,7 +471,7 @@ def _bwd(q, k, v, out, lse, do, p: FlashParams, band=None):
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=p.interpret,
-    )(band, q, k, v, do, lse, dsum)
+    )(band, *operands)
     return dq, dk, dv
 
 
@@ -435,3 +503,25 @@ def _flash_bwd_rule(p: FlashParams, res, do):
 
 
 _flash_folded.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _flash_folded_doc(q, k, v, doc, p: FlashParams):
+    """Packed-document variant: ``doc`` is the (B, Lq_pad) int32 per-row
+    doc-start table (integer data — its cotangent is float0)."""
+    out, _ = _fwd(q, k, v, p, doc=doc)
+    return out
+
+
+def _flash_doc_fwd_rule(q, k, v, doc, p: FlashParams):
+    out, lse = _fwd(q, k, v, p, doc=doc)
+    return out, (q, k, v, doc, out, lse)
+
+
+def _flash_doc_bwd_rule(p: FlashParams, res, do):
+    q, k, v, doc, out, lse = res
+    dq, dk, dv = _bwd(q, k, v, out, lse, do, p, doc=doc)
+    return dq, dk, dv, np.zeros(doc.shape, jax.dtypes.float0)
+
+
+_flash_folded_doc.defvjp(_flash_doc_fwd_rule, _flash_doc_bwd_rule)

@@ -51,10 +51,14 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as ref_mod
 from repro.kernels.flash_attention import (FlashParams, _flash_folded,
-                                           _fwd, _bwd)
+                                           _flash_folded_doc, _fwd, _bwd)
 from repro.kernels.ref import BandMask
 
 NEG_INF = ref_mod.NEG_INF
+
+#: doc-start sentinel for padded q rows: larger than any logical position,
+#: so padding rows see no keys (their outputs are dropped by _unfold).
+DOC_PAD = 1 << 30
 
 
 def resolve_impl(impl: str) -> str:
@@ -84,7 +88,8 @@ def _unfold(x, b: int, h: int, l: int, d: int):
 
 
 def _make_params(q, k, *, causal, window, softcap, scale, kv_valid_len,
-                 block_q, block_k, interpret, q_seg=0, k_seg=0):
+                 block_q, block_k, interpret, q_seg=0, k_seg=0,
+                 packed=False, doc_skip=True):
     _, lq, _, d = q.shape
     _, lk, _, _ = k.shape
     if scale is None:
@@ -97,7 +102,20 @@ def _make_params(q, k, *, causal, window, softcap, scale, kv_valid_len,
                        lk_valid=int(lk_valid),
                        block_q=bq, block_k=bk, interpret=interpret,
                        q_seg=int(q_seg), k_seg=int(k_seg),
-                       delta=int(lk - lq)), bq, bk
+                       delta=int(lk - lq), packed=bool(packed),
+                       doc_skip=bool(doc_skip)), bq, bk
+
+
+def _pad_doc(q_doc_start, lq: int, block_q: int):
+    """(B, Lq) int32 doc-start table, q rows padded with ``DOC_PAD`` (the
+    padded rows attend nothing; their outputs are dropped)."""
+    doc = jnp.asarray(q_doc_start, jnp.int32)
+    assert doc.ndim == 2 and doc.shape[1] == lq, (doc.shape, lq)
+    lq_pad = _round_up(lq, block_q)
+    if lq_pad != lq:
+        doc = jnp.pad(doc, ((0, 0), (0, lq_pad - lq)),
+                      constant_values=DOC_PAD)
+    return doc
 
 
 def _band_scalars(band, mask_offset, lq: int, lk: int, kv_valid_len,
@@ -125,19 +143,32 @@ def flash_attention(q, k, v, *, causal: bool = False,
                     window: int | None = None, softcap: float = 0.0,
                     scale: float | None = None,
                     kv_valid_len: int | None = None,
+                    q_doc_start=None, doc_skip: bool = True,
                     impl: str = "auto",
                     block_q: int = 128, block_k: int = 128):
-    """Differentiable attention.  Returns out (B, Lq, Hq, D)."""
+    """Differentiable attention.  Returns out (B, Lq, Hq, D).
+
+    ``q_doc_start``: packed-document block-causal masking — a (B, Lq)
+    int32 table of each q row's logical document start (see ref.py).
+    Requires ``causal=True``; on the Pallas path, K blocks entirely below
+    a q block's doc start are *skipped* (``doc_skip=False`` keeps the
+    element-wise mask but disables the skip — the dense-masked baseline
+    the packing bench measures against).
+    """
     impl = resolve_impl(impl)
+    if q_doc_start is not None and not causal:
+        raise ValueError("q_doc_start requires causal=True")
     if impl == "flashref":
         out, _ = ref_mod.attention_ref_chunked(
             q, k, v, causal=causal, window=window, softcap=softcap,
-            scale=scale, kv_valid_len=kv_valid_len)
+            scale=scale, kv_valid_len=kv_valid_len,
+            q_doc_start=q_doc_start)
         return out
     if impl == "ref":
         out, _ = ref_mod.attention_ref(
             q, k, v, causal=causal, window=window, softcap=softcap,
-            scale=scale, kv_valid_len=kv_valid_len)
+            scale=scale, kv_valid_len=kv_valid_len,
+            q_doc_start=q_doc_start)
         return out
     interpret = impl == "pallas_interpret"
     b, lq, hq, d = q.shape
@@ -145,12 +176,18 @@ def flash_attention(q, k, v, *, causal: bool = False,
     p, bq, bk = _make_params(q, k, causal=causal, window=window,
                              softcap=softcap, scale=scale,
                              kv_valid_len=kv_valid_len, block_q=block_q,
-                             block_k=block_k, interpret=interpret)
+                             block_k=block_k, interpret=interpret,
+                             packed=q_doc_start is not None,
+                             doc_skip=doc_skip)
     d_pad = _round_up(d, 128)
     qf = _fold_pad(q, bq, d_pad)
     kf = _fold_pad(k, bk, d_pad)
     vf = _fold_pad(v, bk, d_pad)
-    out = _flash_folded(qf, kf, vf, p)
+    if q_doc_start is not None:
+        doc = _pad_doc(q_doc_start, lq, bq)
+        out = _flash_folded_doc(qf, kf, vf, doc, p)
+    else:
+        out = _flash_folded(qf, kf, vf, p)
     return _unfold(out, b, hq, lq, d)
 
 
@@ -159,6 +196,7 @@ def flash_fwd_chunk(q, k, v, *, causal: bool = False,
                     scale: float | None = None,
                     kv_valid_len: int | None = None, kv_start=None,
                     mask_offset=None, band: BandMask | None = None,
+                    q_doc_start=None, doc_skip: bool = True,
                     impl: str = "auto",
                     block_q: int = 128, block_k: int = 128):
     """Non-differentiable (out, lse) — ring / decode building block.
@@ -167,11 +205,16 @@ def flash_fwd_chunk(q, k, v, *, causal: bool = False,
 
     ``mask_offset`` / ``band`` may be traced: the Pallas path threads them
     into the kernel as scalar-prefetch operands and keeps its block-skip
-    logic (no downgrade to the jnp path).  Per-request ``(B,)`` ragged
-    offsets (``mask_offset`` / ``kv_valid_len`` / ``kv_start`` — the
+    logic (no downgrade to the jnp path).  ``q_doc_start`` (packed
+    documents, (B, Lq) int32 per-row doc starts) rides in as a blocked
+    VMEM operand the same way — cross-document K blocks are skipped
+    unless ``doc_skip=False``.  Per-request ``(B,)`` ragged offsets
+    (``mask_offset`` / ``kv_valid_len`` / ``kv_start`` — the
     continuous-batching decode case) are ref-path only.
     """
     impl = resolve_impl(impl)
+    if q_doc_start is not None and not causal:
+        raise ValueError("q_doc_start requires causal=True")
     ragged = any(isinstance(x, jax.Array) and x.ndim >= 1
                  for x in (mask_offset, kv_valid_len, kv_start))
     if kv_start is not None or ragged:
@@ -183,12 +226,12 @@ def flash_fwd_chunk(q, k, v, *, causal: bool = False,
         return ref_mod.attention_ref_chunked(
             q, k, v, causal=causal, window=window, softcap=softcap,
             scale=scale, kv_valid_len=kv_valid_len, kv_start=kv_start,
-            mask_offset=mask_offset, band=band)
+            mask_offset=mask_offset, band=band, q_doc_start=q_doc_start)
     if impl == "ref":
         return ref_mod.attention_ref(
             q, k, v, causal=causal, window=window, softcap=softcap,
             scale=scale, kv_valid_len=kv_valid_len, kv_start=kv_start,
-            mask_offset=mask_offset, band=band)
+            mask_offset=mask_offset, band=band, q_doc_start=q_doc_start)
     interpret = impl == "pallas_interpret"
     b, lq, hq, d = q.shape
     _, lk, hkv, _ = k.shape
@@ -199,12 +242,15 @@ def flash_fwd_chunk(q, k, v, *, causal: bool = False,
                              softcap=softcap, scale=scale,
                              kv_valid_len=None, block_q=block_q,
                              block_k=block_k, interpret=interpret,
-                             q_seg=q_seg, k_seg=k_seg)
+                             q_seg=q_seg, k_seg=k_seg,
+                             packed=q_doc_start is not None,
+                             doc_skip=doc_skip)
     d_pad = _round_up(d, 128)
     qf = _fold_pad(q, bq, d_pad)
     kf = _fold_pad(k, bk, d_pad)
     vf = _fold_pad(v, bk, d_pad)
-    out, lse = _fwd(qf, kf, vf, p, band=scalars)
+    doc = None if q_doc_start is None else _pad_doc(q_doc_start, lq, bq)
+    out, lse = _fwd(qf, kf, vf, p, band=scalars, doc=doc)
     out = _unfold(out, b, hq, lq, d)
     lse = lse[:, :lq].reshape(b, hq, lq)
     return out, lse
@@ -215,6 +261,7 @@ def flash_bwd_chunk(q, k, v, out, lse, do, *, causal: bool = False,
                     scale: float | None = None,
                     kv_valid_len: int | None = None,
                     mask_offset=None, band: BandMask | None = None,
+                    q_doc_start=None, doc_skip: bool = True,
                     impl: str = "auto",
                     block_q: int = 128, block_k: int = 128):
     """Chunk backward given global (out, lse).  Returns (dq, dk, dv).
@@ -223,16 +270,18 @@ def flash_bwd_chunk(q, k, v, out, lse, do, *, causal: bool = False,
     ``group×``-expanded K/V is allocated on any path.
     """
     impl = resolve_impl(impl)
+    if q_doc_start is not None and not causal:
+        raise ValueError("q_doc_start requires causal=True")
     if impl == "flashref":
         return ref_mod.attention_bwd_ref_chunked(
             q, k, v, out, lse, do, causal=causal, window=window,
             softcap=softcap, scale=scale, kv_valid_len=kv_valid_len,
-            mask_offset=mask_offset, band=band)
+            mask_offset=mask_offset, band=band, q_doc_start=q_doc_start)
     if impl == "ref":
         return ref_mod.attention_bwd_ref(
             q, k, v, out, lse, do, causal=causal, window=window,
             softcap=softcap, scale=scale, kv_valid_len=kv_valid_len,
-            mask_offset=mask_offset, band=band)
+            mask_offset=mask_offset, band=band, q_doc_start=q_doc_start)
     interpret = impl == "pallas_interpret"
     b, lq, hq, d = q.shape
     _, lk, hkv, _ = k.shape
@@ -243,7 +292,9 @@ def flash_bwd_chunk(q, k, v, out, lse, do, *, causal: bool = False,
                              softcap=softcap, scale=scale,
                              kv_valid_len=None, block_q=block_q,
                              block_k=block_k, interpret=interpret,
-                             q_seg=q_seg, k_seg=k_seg)
+                             q_seg=q_seg, k_seg=k_seg,
+                             packed=q_doc_start is not None,
+                             doc_skip=doc_skip)
     d_pad = _round_up(d, 128)
     qf = _fold_pad(q, bq, d_pad)
     kf = _fold_pad(k, bk, d_pad)
@@ -254,7 +305,9 @@ def flash_bwd_chunk(q, k, v, out, lse, do, *, causal: bool = False,
     lsef = lse.reshape(b * hq, lq)
     if lq_pad != lq:
         lsef = jnp.pad(lsef, ((0, 0), (0, lq_pad - lq)))
-    dqf, dkf, dvf = _bwd(qf, kf, vf, outf, lsef, dof, p, band=scalars)
+    doc = None if q_doc_start is None else _pad_doc(q_doc_start, lq, bq)
+    dqf, dkf, dvf = _bwd(qf, kf, vf, outf, lsef, dof, p, band=scalars,
+                         doc=doc)
     dq = _unfold(dqf, b, hq, lq, d)
     dk = _unfold(dkf, b, hkv, lk, d).astype(k.dtype)
     dv = _unfold(dvf, b, hkv, lk, d).astype(v.dtype)

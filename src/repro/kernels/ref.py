@@ -75,6 +75,13 @@ class BandMask(NamedTuple):
                              q_seg=max(self.q_seg - q0, 0))
 
 
+def _doc_col(q_doc_start):
+    """(Lq,) or (B, Lq) per-row doc-start -> column vector that broadcasts
+    against a (…, Lq, Lk) logical-position grid."""
+    d = jnp.asarray(q_doc_start, jnp.int32)
+    return d[..., :, None]
+
+
 def _per_batch(x):
     """Lift a per-request (B,) offset to broadcast against (Lq, Lk) index
     grids — masks become (B, Lq, Lk).  Scalars pass through untouched."""
@@ -92,8 +99,8 @@ def _logical_pos(idx, off_lo, off_hi, seg: int):
 
 def _build_mask(lq: int, lk: int, *, causal: bool, window: int | None,
                 kv_valid_len: int | None, kv_start=None,
-                mask_offset=None, band: BandMask | None = None
-                ) -> jax.Array | None:
+                mask_offset=None, band: BandMask | None = None,
+                q_doc_start=None) -> jax.Array | None:
     """Boolean (Lq, Lk) — or (B, Lq, Lk) for per-request offsets —
     visibility mask, or None if everything is visible.
 
@@ -104,11 +111,22 @@ def _build_mask(lq: int, lk: int, *, causal: bool, window: int | None,
     to the segmented zigzag layout and takes precedence.  ``kv_valid_len``
     and ``kv_start`` bound the visible key *physical* index range
     ``[kv_start, kv_valid_len)``; both may also be ``(B,)``.
+
+    ``q_doc_start`` — packed-document block-causal masking: a ``(Lq,)``
+    or per-sequence ``(B, Lq)`` int32 table giving, for each *physical*
+    q row, the logical start position of the document that row's token
+    belongs to.  Keys below that start are invisible (``k_log >=
+    doc_start``), which together with the causal band restricts each
+    query to its own document.  Requires ``causal=True`` (documents are
+    contiguous logical intervals, so causal + lower bound == same-doc).
     """
     if band is not None and not causal and window is None:
         raise ValueError("band only shifts the causal/window band anchors; "
                          "passing one with causal=False and window=None "
                          "would be silently ignored")
+    if q_doc_start is not None and not causal:
+        raise ValueError("q_doc_start (packed block-causal masking) "
+                         "requires causal=True")
     if not causal and window is None and kv_valid_len is None \
             and kv_start is None:
         return None
@@ -122,6 +140,8 @@ def _build_mask(lq: int, lk: int, *, causal: bool, window: int | None,
     mask = jnp.ones((lq, lk), dtype=bool)
     if causal:
         mask = mask & (k_log <= q_log)
+    if q_doc_start is not None:
+        mask = mask & (k_log >= _doc_col(q_doc_start))
     if window is not None:
         mask = mask & (k_log >= q_log - (window - 1))
     if kv_valid_len is not None:
@@ -136,6 +156,7 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   softcap: float = 0.0, scale: float | None = None,
                   kv_valid_len: int | None = None, kv_start=None,
                   mask_offset=None, band: BandMask | None = None,
+                  q_doc_start=None,
                   bias: jax.Array | None = None):
     """Dense fp32 attention oracle.  Returns (out, lse).
 
@@ -164,7 +185,8 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
         s = s + jnp.transpose(bias.astype(jnp.float32), (0, 2, 1, 3))
     mask = _build_mask(lq, lk, causal=causal, window=window,
                        kv_valid_len=kv_valid_len, kv_start=kv_start,
-                       mask_offset=mask_offset, band=band)
+                       mask_offset=mask_offset, band=band,
+                       q_doc_start=q_doc_start)
     if mask is not None:
         # s is (B, Lq, H, Lk): lift (Lq, Lk) or per-request (B, Lq, Lk).
         mask_s = mask[None, :, None] if mask.ndim == 2 else mask[:, :, None]
@@ -189,7 +211,8 @@ def attention_bwd_ref(q, k, v, out, lse, do, *,
                       causal: bool = False, window: int | None = None,
                       softcap: float = 0.0, scale: float | None = None,
                       kv_valid_len: int | None = None, kv_start=None,
-                      mask_offset=None, band: BandMask | None = None):
+                      mask_offset=None, band: BandMask | None = None,
+                      q_doc_start=None):
     """Chunk-level attention backward given *global* (out, lse).
 
     This is the ring-attention backward building block: ``lse``/``out`` are
@@ -217,7 +240,8 @@ def attention_bwd_ref(q, k, v, out, lse, do, *,
     s = softcap * jnp.tanh(s_raw / softcap) if softcap else s_raw
     mask = _build_mask(lq, lk, causal=causal, window=window,
                        kv_valid_len=kv_valid_len, kv_start=kv_start,
-                       mask_offset=mask_offset, band=band)
+                       mask_offset=mask_offset, band=band,
+                       q_doc_start=q_doc_start)
     shift = jnp.where(lse <= NEG_INF / 2, 0.0, lse)      # (B,H,Lq)
     p = jnp.exp(s - shift[..., None])
     if mask is not None:
@@ -292,10 +316,19 @@ def _chunk_band(band, mask_offset, lq: int, lk: int, q0: int, *,
     return band.shift_q(q0)
 
 
+def _chunk_doc(q_doc_start, q0: int, q_chunk: int):
+    """Slice the per-row doc-start table to a q sub-chunk (physical rows
+    index it, so chunking is a plain slice)."""
+    if q_doc_start is None:
+        return None
+    return jnp.asarray(q_doc_start)[..., q0:q0 + q_chunk]
+
+
 def attention_ref_chunked(q, k, v, *, causal=False, window=None,
                           softcap=0.0, scale=None, kv_valid_len=None,
                           kv_start=None,
                           mask_offset=None, band: BandMask | None = None,
+                          q_doc_start=None,
                           q_chunk: int = 1024):
     """Flash-semantics lowering of the oracle: scores materialize only per
     q-chunk (O(q_chunk × Lk)), matching what the Pallas kernel does in
@@ -309,7 +342,8 @@ def attention_ref_chunked(q, k, v, *, causal=False, window=None,
         return attention_ref(q, k, v, causal=causal, window=window,
                              softcap=softcap, scale=scale,
                              kv_valid_len=kv_valid_len, kv_start=kv_start,
-                             mask_offset=mask_offset, band=band)
+                             mask_offset=mask_offset, band=band,
+                             q_doc_start=q_doc_start)
     lk = k.shape[1]
     outs, lses = [], []
     for q0 in bounds:
@@ -319,7 +353,9 @@ def attention_ref_chunked(q, k, v, *, causal=False, window=None,
                              kv_valid_len=kv_valid_len, kv_start=kv_start,
                              band=_chunk_band(band, mask_offset, lq, lk,
                                               q0, causal=causal,
-                                              window=window))
+                                              window=window),
+                             q_doc_start=_chunk_doc(q_doc_start, q0,
+                                                    q_chunk))
         outs.append(o)
         lses.append(l)
     return (jnp.concatenate(outs, axis=1),
@@ -330,6 +366,7 @@ def attention_bwd_ref_chunked(q, k, v, out, lse, do, *, causal=False,
                               window=None, softcap=0.0, scale=None,
                               kv_valid_len=None, mask_offset=None,
                               band: BandMask | None = None,
+                              q_doc_start=None,
                               q_chunk: int = 1024):
     """q-chunked chunk-backward; dk/dv accumulate in fp32."""
     b, lq, hq, d = q.shape
@@ -338,7 +375,8 @@ def attention_bwd_ref_chunked(q, k, v, out, lse, do, *, causal=False,
         return attention_bwd_ref(q, k, v, out, lse, do, causal=causal,
                                  window=window, softcap=softcap,
                                  scale=scale, kv_valid_len=kv_valid_len,
-                                 mask_offset=mask_offset, band=band)
+                                 mask_offset=mask_offset, band=band,
+                                 q_doc_start=q_doc_start)
     lk = k.shape[1]
     dqs = []
     dk = jnp.zeros(k.shape, jnp.float32)
@@ -350,7 +388,8 @@ def attention_bwd_ref_chunked(q, k, v, out, lse, do, *, causal=False,
             causal=causal, window=window, softcap=softcap, scale=scale,
             kv_valid_len=kv_valid_len,
             band=_chunk_band(band, mask_offset, lq, lk, q0,
-                             causal=causal, window=window))
+                             causal=causal, window=window),
+            q_doc_start=_chunk_doc(q_doc_start, q0, q_chunk))
         dqs.append(dq_c)
         dk = dk + dk_c.astype(jnp.float32)
         dv = dv + dv_c.astype(jnp.float32)

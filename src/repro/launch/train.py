@@ -14,6 +14,12 @@ remat, microbatching — are made once by ``build_plan`` and printed via
 ``--smoke`` swaps in the reduced config + a 1-device mesh — the same code
 path end to end, laptop-sized.
 
+``--pack`` trains on packed documents (``PackedLM``): variable-length
+documents bin-packed into the sequence window with per-document
+block-causal masking through the 2D-Attention stack; ``--mean-doc-len``
+scales the document-length distribution and the cost model's packing
+term (default ``seq_len // 4``).
+
 PlanTuner integration: ``--plan-file plan.json`` consumes a persisted
 ``TunedPlan`` (no search — the cached winner supplies dp/hp/cp/placement,
 grad-accum, remat and ZeRO); ``--tune`` runs the enumerate+score search
@@ -35,9 +41,12 @@ from repro.train.optimizer import OptConfig
 from repro.train.trainer import Trainer, TrainerConfig
 
 
-def resolve_tuned(args, cfg, *, seq: int, gb: int, smoke: bool):
+def resolve_tuned(args, cfg, *, seq: int, gb: int, smoke: bool,
+                  packing: float = 1.0):
     """--plan-file / --tune resolution: a cached TunedPlan wins; --tune
-    searches (and caches to --plan-file when given)."""
+    searches (and caches to --plan-file when given).  ``packing`` is the
+    packed-workload fraction (mean_doc_len / seq_len) the cost model
+    scores with — 1.0 for unpacked runs."""
     from repro.tune import TunedPlan, tune
     if args.plan_file and os.path.exists(args.plan_file):
         tuned = TunedPlan.load(args.plan_file)
@@ -60,7 +69,7 @@ def resolve_tuned(args, cfg, *, seq: int, gb: int, smoke: bool):
     result = tune(cfg, num_devices=len(jax.devices()), seq_len=seq,
                   global_batch=gb,
                   memory_budget_gb=1.0 if smoke else 16.0,
-                  arch=args.arch)
+                  packing=packing, arch=args.arch)
     print(result.table())
     tuned = result.tuned_plan()
     if args.plan_file:
@@ -84,6 +93,15 @@ def main():
     ap.add_argument("--placement", default=None)
     ap.add_argument("--remat", default=None,
                     help="none|full|scpp|auto (default: model config)")
+    ap.add_argument("--pack", action="store_true",
+                    help="packed-document training: bin-packed variable-"
+                         "length documents with per-document block-causal "
+                         "masking (PackedLM)")
+    ap.add_argument("--mean-doc-len", type=int, default=None,
+                    help="expected mean document length of the packed "
+                         "stream (default: seq_len // 4); sets the data "
+                         "source's length range and the cost model's "
+                         "packing term")
     ap.add_argument("--tune", action="store_true",
                     help="search the plan space for the attached devices "
                          "before training")
@@ -119,10 +137,13 @@ def main():
         devices = None
         seq, gb = args.seq_len, args.global_batch
 
+    mean_doc = args.mean_doc_len or max(8, seq // 4)
     tuned = None
     grad_accum = args.grad_accum
     if args.tune or args.plan_file:
-        tuned = resolve_tuned(args, cfg, seq=seq, gb=gb, smoke=args.smoke)
+        tuned = resolve_tuned(args, cfg, seq=seq, gb=gb, smoke=args.smoke,
+                              packing=min(1.0, mean_doc / seq)
+                              if args.pack else 1.0)
         pc = tuned.parallel()
         devices = None
         if grad_accum is None and gb % tuned.grad_accum:
@@ -138,6 +159,8 @@ def main():
                                          total_steps=args.steps),
                       devices=devices, grad_accum=grad_accum,
                       remat=args.remat, seq_len=seq, global_batch=gb,
+                      packed=args.pack,
+                      mean_doc_len=mean_doc if args.pack else None,
                       tuned=tuned)
     print(plan.describe())
     trainer = Trainer(

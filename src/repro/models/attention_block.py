@@ -79,13 +79,15 @@ def _project_qkv(p, x, n_heads, n_kv_heads, head_dim, cos, sin,
 def gqa_apply(p, x, cos, sin, rt: Runtime, kind: AttnKind, *,
               n_heads: int, n_kv_heads: int, head_dim: int,
               qk_norm: bool = False, zigzag: bool = True,
-              scale: float | None = None):
-    """x: (B, S, D) -> (B, S, D).  cos/sin: (B, S, head_dim/2)."""
+              scale: float | None = None, doc_start=None):
+    """x: (B, S, D) -> (B, S, D).  cos/sin: (B, S, head_dim/2).
+    ``doc_start``: (B, S) packed-document boundary table (see
+    attention_2d)."""
     b, s, _ = x.shape
     q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim, cos, sin,
                            kind, qk_norm=qk_norm)
     cfg = make_2d_cfg(rt, kind, zigzag=zigzag, scale=scale)
-    out = attention_2d(q, k, v, mesh=rt.mesh, cfg=cfg)
+    out = attention_2d(q, k, v, mesh=rt.mesh, cfg=cfg, doc_start=doc_start)
     out = checkpoint_name(out, "attn_out")   # Selective Checkpoint++
     return linear_apply(p["wo"], out.reshape(b, s, n_heads * head_dim))
 
@@ -120,7 +122,7 @@ def init_mla(key, d_model: int, m: MLADims):
 
 
 def mla_apply(p, x, cos, sin, rt: Runtime, kind: AttnKind, m: MLADims, *,
-              zigzag: bool = True):
+              zigzag: bool = True, doc_start=None):
     """Training path: up-project the latent, run standard 2D-Attention.
 
     cos/sin must be built for head_dim = d_rope.
@@ -146,7 +148,8 @@ def mla_apply(p, x, cos, sin, rt: Runtime, kind: AttnKind, m: MLADims, *,
 
     cfg = make_2d_cfg(rt, kind, zigzag=zigzag,
                       scale=1.0 / (m.d_qk ** 0.5))
-    out = attention_2d(q, k, v_pad, mesh=rt.mesh, cfg=cfg)[..., :m.d_v]
+    out = attention_2d(q, k, v_pad, mesh=rt.mesh, cfg=cfg,
+                       doc_start=doc_start)[..., :m.d_v]
     out = checkpoint_name(out, "attn_out")
     return linear_apply(p["wo"], out.reshape(b, s, m.n_heads * m.d_v))
 

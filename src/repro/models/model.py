@@ -208,18 +208,19 @@ def init_transformer_block(key, cfg: ModelConfig, *, moe_layer: bool):
 
 
 def apply_transformer_block(p, x, ropes, rt: Runtime, cfg: ModelConfig,
-                            kind: AttnKind, *, moe_layer: bool):
+                            kind: AttnKind, *, moe_layer: bool,
+                            doc_start=None):
     """Returns (x, aux_loss)."""
     cos, sin = ropes[kind.rope_theta]
     h = apply_norm(cfg, p["ln1"], x)
     if cfg.mla is not None:
         h = mla_apply(p["attn"], h, cos, sin, rt, kind, cfg.mla,
-                      zigzag=cfg.zigzag)
+                      zigzag=cfg.zigzag, doc_start=doc_start)
     else:
         h = gqa_apply(p["attn"], h, cos, sin, rt, kind,
                       n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
                       head_dim=cfg.hd, qk_norm=cfg.qk_norm,
-                      zigzag=cfg.zigzag)
+                      zigzag=cfg.zigzag, doc_start=doc_start)
     if cfg.post_norms:
         h = apply_norm(cfg, p["pn1"], h)
     x = x + h
@@ -363,8 +364,15 @@ def _scan_blocks(body, x, stacked, policy, collect: bool = False,
     return x, aux, ys
 
 
-def backbone(params, x, ropes, rt: Runtime, cfg: ModelConfig):
-    """Embedded input -> final hidden states.  Returns (x, aux)."""
+def backbone(params, x, ropes, rt: Runtime, cfg: ModelConfig,
+             doc_start=None):
+    """Embedded input -> final hidden states.  Returns (x, aux).
+
+    ``doc_start`` (packed documents) reaches only the attention blocks;
+    SSM mixing layers are sequence-recurrent and have no packed mode
+    (their state would need per-document resets) — packing is gated to
+    attention families by the ExecutionPlan.
+    """
     aux_total = jnp.zeros((), jnp.float32)
     policy = remat_policy(cfg.remat)
 
@@ -377,7 +385,7 @@ def backbone(params, x, ropes, rt: Runtime, cfg: ModelConfig):
             for slot in range(period):
                 x, a = apply_transformer_block(
                     lps[slot], x, ropes, rt, cfg, kinds[slot],
-                    moe_layer=cfg.family == "moe")
+                    moe_layer=cfg.family == "moe", doc_start=doc_start)
                 aux = aux + a
             return x, aux
 
@@ -561,6 +569,7 @@ def forward_loss(params, batch, rt: Runtime, cfg: ModelConfig):
     """batch: {tokens, labels, positions[, frames]} -> (loss, metrics)."""
     tokens = batch["tokens"]
     positions = batch["positions"]
+    doc_start = batch.get("doc_start")       # packed documents (PackedLM)
     params = cast_params_once(params, cfg)
     x = embed_tokens(params, tokens, cfg)
     x = rt.constrain(x, None)
@@ -571,7 +580,7 @@ def forward_loss(params, batch, rt: Runtime, cfg: ModelConfig):
         x = whisper_decoder(params, x, enc, ropes, rt, cfg, positions)
         aux = jnp.zeros((), jnp.float32)
     else:
-        x, aux = backbone(params, x, ropes, rt, cfg)
+        x, aux = backbone(params, x, ropes, rt, cfg, doc_start=doc_start)
 
     x = apply_norm(cfg, params["final_norm"], x)
     x = rt.constrain(x, None)

@@ -48,15 +48,25 @@ def make_train_step(plan: ExecutionPlan):
         else:
             def micro(g_acc, mb):
                 (_, m), g = grad_of(p_half, mb)
-                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                # token-weighted accumulation: each microbatch's grad is
+                # of its *mean* loss, so scale by its valid-token count
+                # before summing.  With equal counts (SyntheticLM) this
+                # reduces to the plain mean over microbatches; with
+                # unequal counts (PackedLM bins carry different tail
+                # padding) it reproduces the flat large-batch step
+                # instead of skewing toward sparsely-filled bins.
+                n = m["n_tokens"].astype(cfg.compute_dtype)
+                g_acc = jax.tree.map(lambda a, g: a + g * n, g_acc, g)
                 return g_acc, m
 
             grads_half, ms = lax.scan(
                 micro, jax.tree.map(jnp.zeros_like, p_half), batch)
-            # mean over microbatches == the equivalent large-batch step
-            # (equal microbatch token counts by construction)
-            grads_half = jax.tree.map(lambda g: g / accum, grads_half)
-            metrics = {k: (v.sum(0) if k == "n_tokens" else v.mean(0))
+            n_total = ms["n_tokens"].sum(0)
+            grads_half = jax.tree.map(
+                lambda g: g / n_total.astype(g.dtype), grads_half)
+            w = ms["n_tokens"] / n_total                # (accum,)
+            metrics = {k: (v.sum(0) if k == "n_tokens"
+                           else (v * w).sum(0))
                        for k, v in ms.items()}
         grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads_half,
                              params)

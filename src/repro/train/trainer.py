@@ -15,7 +15,7 @@ import logging
 import jax
 
 from repro.core.plan import ExecutionPlan
-from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.data.pipeline import DataConfig, PackedLM, SyntheticLM
 from repro.models.model import init_params
 from repro.runtime import checkpoint as ckpt
 from repro.runtime.resilience import PreemptionGuard, StepMonitor
@@ -42,7 +42,11 @@ class Trainer:
         if data_cfg.grad_accum != plan.grad_accum:
             data_cfg = dataclasses.replace(data_cfg,
                                            grad_accum=plan.grad_accum)
-        self.data = SyntheticLM(data_cfg, plan.cfg)
+        # packed plans pull document batches (with doc_start boundary
+        # tables) — the step function's batch pytree must match
+        # plan.batch_shardings("train"), which adds doc_start iff packed
+        self.data = (PackedLM if plan.packed else SyntheticLM)(
+            data_cfg, plan.cfg)
         self.monitor = StepMonitor()
         self.guard = PreemptionGuard()
         self.guard.install()

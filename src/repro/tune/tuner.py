@@ -95,13 +95,16 @@ class TuneResult:
 
 
 def score_candidate(cfg, cand: Candidate, *, seq_len: int,
-                    global_batch: int,
+                    global_batch: int, packing: float = 1.0,
                     const: CostConstants = V5E) -> ScoredCandidate:
-    """Analytic step time of one candidate via the shared cost model."""
+    """Analytic step time of one candidate via the shared cost model.
+    ``packing``: attendable causal-band fraction of a packed-document
+    stream (``ExecutionPlan.packing_frac``); 1.0 = unpacked."""
     pc = cand.pc
     case = AttnCase(s=seq_len, d=cfg.d_model, h=cfg.n_heads,
                     h_kv=cfg.n_kv_heads, sp=pc.sp, hp=pc.hp,
-                    w=pc.cp_inner, placement=pc.placement)
+                    w=pc.cp_inner, placement=pc.placement,
+                    packing=packing)
     terms = train_step_time(
         case, d_ff=cfg.d_ff, n_layers=cfg.num_layers, remat=cand.remat,
         seqs_per_group=global_batch / (pc.pods * pc.dp),
@@ -115,12 +118,15 @@ def tune(cfg, *, num_devices: int, seq_len: int, global_batch: int,
          pods: int = 1, memory_budget_gb: float = 16.0,
          dp: int | None = None, const: CostConstants | None = None,
          measure_top_k: int = 0, measure_steps: int = 3,
+         packing: float = 1.0,
          arch: str | None = None, **space_kw) -> TuneResult:
     """Enumerate → score (→ measure) the 2D-Attention plan space.
 
     Stage 3 runs only when ``measure_top_k > 0`` *and* the candidates fit
     the actually-attached devices; it times ``measure_steps`` jitted
     train steps per candidate (see ``repro/tune/measure.py``).
+    ``packing < 1`` scores a packed-document workload (attention FLOPs
+    scale down, ring/AlltoAll wire bytes do not).
     """
     const = const or V5E
     cands = enumerate_space(cfg, num_devices=num_devices, seq_len=seq_len,
@@ -128,7 +134,8 @@ def tune(cfg, *, num_devices: int, seq_len: int, global_batch: int,
                             memory_budget_gb=memory_budget_gb, dp=dp,
                             **space_kw)
     scored = [score_candidate(cfg, c, seq_len=seq_len,
-                              global_batch=global_batch, const=const)
+                              global_batch=global_batch, packing=packing,
+                              const=const)
               for c in cands]
     # deterministic ranking: score, then prefer fewer moving parts
     scored.sort(key=lambda s: (s.score_s, s.cand.grad_accum,

@@ -422,6 +422,86 @@ def check_accum_collectives():
     print("PASS accum_collectives")
 
 
+def check_packed_parity():
+    """Packed-document training parity: one packed batch of K documents
+    must produce the same loss and parameter gradients as K independent
+    unpacked runs (token-weighted aggregate), on a ring (cp>1) config and
+    a Ulysses (hp>1) config — and the packed traced step must stay on the
+    Pallas kernels (the jnp fallbacks are poisoned: no flashref
+    downgrade for the doc-masked path)."""
+    import dataclasses as dc
+    from repro.configs import get_reduced
+    from repro.core.plan import build_plan
+    from repro.core.topology import ParallelConfig
+    from repro.data.pipeline import PackedLM
+    from repro.kernels import ref as ref_mod
+    from repro.models.model import forward_loss, init_params
+
+    cfg = dc.replace(get_reduced("qwen3-1.7b"), window=None,
+                     window_pattern=0)
+    S, B = 64, 2
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    def boom(*a, **kw):
+        raise AssertionError("jnp fallback selected on the packed path")
+
+    poisoned = ("attention_ref_chunked", "attention_bwd_ref_chunked")
+    saved = {n: getattr(ref_mod, n) for n in poisoned}
+
+    # single-device per-document oracle (token-weighted aggregation)
+    plan0 = build_plan(cfg, ParallelConfig(), devices=jax.devices()[:1],
+                       impl="ref", seq_len=S, global_batch=B)
+
+    for pc in (ParallelConfig(dp=1, hp=1, cp_outer=2, cp_inner=2),
+               ParallelConfig(dp=1, hp=2, cp_outer=1, cp_inner=1),
+               # the full 2D composition: head AlltoAll gathers the doc
+               # table, the zigzag ring keeps it stationary
+               ParallelConfig(dp=1, hp=2, cp_outer=1, cp_inner=2)):
+        plan = build_plan(cfg, pc, impl="pallas_interpret", seq_len=S,
+                          global_batch=B, packed=True, mean_doc_len=16)
+        data = PackedLM(plan.data_config(S, B, doc_len_range=(10, 38)),
+                        cfg)
+        batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+        grad_of = jax.value_and_grad(
+            lambda p, b, rt: forward_loss(p, b, rt, cfg)[0],
+            has_aux=False)
+        for n in poisoned:
+            setattr(ref_mod, n, boom)
+        try:
+            with plan.mesh:
+                loss_p, grads_p = grad_of(params, batch, plan.rt)
+        finally:
+            for n, fn in saved.items():
+                setattr(ref_mod, n, fn)
+
+        # K independent unpacked runs, one per document
+        total, loss_acc = 0.0, 0.0
+        grad_acc = jax.tree.map(lambda x: np.zeros(x.shape, np.float64),
+                                params)
+        docs = [d for seq_docs in data.documents(0) for d in seq_docs]
+        assert len(docs) >= 3, len(docs)
+        with plan0.mesh:
+            for d in docs:
+                db = {k: jnp.asarray(d[k][None]) for k in
+                      ("tokens", "labels", "positions")}
+                loss_d, grads_d = grad_of(params, db, plan0.rt)
+                n_d = float((d["labels"] >= 0).sum())
+                total += n_d
+                loss_acc += n_d * float(loss_d)
+                grad_acc = jax.tree.map(
+                    lambda a, g: a + n_d * np.asarray(g, np.float64),
+                    grad_acc, grads_d)
+        loss_ind = loss_acc / total
+        grads_ind = jax.tree.map(lambda a: a / total, grad_acc)
+
+        assert abs(float(loss_p) - loss_ind) < 1e-5, \
+            (pc, float(loss_p), loss_ind)
+        for a, b in zip(jax.tree.leaves(grads_p),
+                        jax.tree.leaves(grads_ind)):
+            assert err(a, b) < 1e-5, pc
+    print("PASS packed_parity")
+
+
 def check_grad_compression():
     """int8 error-feedback psum inside shard_map over the data axis."""
     from jax.sharding import PartitionSpec as P
