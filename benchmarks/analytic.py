@@ -1,9 +1,15 @@
-"""Thin shim: the §4.5 cost model now lives in ``repro/analysis/cost.py``
-(one implementation shared by the PlanTuner, the roofline, and these
-benches).  This module re-exports the public surface so existing bench
-invocations and notebooks keep working.
+"""Deprecated shim: the §4.5 cost model lives in ``repro.analysis.cost``
+(one implementation shared by the PlanTuner, the roofline, and the
+benches — import it from there).  This module re-exports the public
+surface for pre-PR-4 invocations and notebooks, and warns.
 """
-from repro.analysis.cost import (                                 # noqa: F401
+import warnings
+
+warnings.warn("benchmarks.analytic is deprecated; import from "
+              "repro.analysis.cost instead", DeprecationWarning,
+              stacklevel=2)
+
+from repro.analysis.cost import (                        # noqa: E402,F401
     BYTES, ICI, MAJOR_PENALTY, PEAK, AttnCase, CostConstants, V5E,
     alltoall_time, attention_op_time, attn_flops_per_device,
     comp_time_fwd, end_to_end_mfu, kv_chunk_bytes, layer_linear_flops,

@@ -3,7 +3,7 @@
 Prints ``name,us_per_call,derived`` CSV rows.
 
 * t2/t3/t4/t5 mirror the paper's Tables 2-5 through the §4.5 cost model
-  re-based on TPU v5e (benchmarks/analytic.py); ``us_per_call`` is the
+  re-based on TPU v5e (repro/analysis/cost.py); ``us_per_call`` is the
   modelled per-op/step time, ``derived`` the headline metric (MFU, bytes,
   speedup).  The model's collective volumes are cross-checked against
   compiled dry-run HLO in EXPERIMENTS.md §Roofline.
@@ -22,7 +22,7 @@ import time
 
 import numpy as np
 
-from benchmarks.analytic import (AttnCase, alltoall_time, attention_op_time,
+from repro.analysis.cost import (AttnCase, alltoall_time, attention_op_time,
                                  end_to_end_mfu, kv_chunk_bytes)
 
 SEQS = [131072, 262144, 524288, 1048576]
@@ -548,10 +548,125 @@ def bench_tune(out_path: str = "BENCH_tune.json"):
         json.dump(bench, f, indent=2)
 
 
+def _ckpt_worker():
+    """Subprocess body for ``bench_ckpt`` (needs 8 fake devices, so it
+    cannot run in the caller's process — the device count locks at first
+    jax use).  Prints one JSON object on the last stdout line."""
+    import shutil
+    import tempfile
+
+    import jax
+    from repro.configs import get_reduced
+    from repro.core.plan import build_plan
+    from repro.core.topology import ParallelConfig
+    from repro.models.model import init_params
+    from repro.runtime.checkpoint import CheckpointManager
+    from repro.train.optimizer import init_opt_state
+
+    cfg = get_reduced("qwen3-1.7b")
+    grids = [("replica.x1", ParallelConfig(dp=2), "replica"),
+             ("zero_dp.x2", ParallelConfig(dp=2), "dp"),
+             ("zero_dp_sp.x8",
+              ParallelConfig(dp=2, hp=2, cp_outer=1, cp_inner=2), "dp_sp")]
+    cases = []
+    for tag, pc, zero in grids:
+        plan = build_plan(cfg, pc, devices=jax.devices()[:pc.num_devices],
+                          impl="ref", seq_len=64, global_batch=8,
+                          zero=zero)
+        with plan.mesh:
+            params = init_params(cfg, jax.random.PRNGKey(0))
+            p_sh = plan.param_shardings(params)
+            params = jax.device_put(params, p_sh)
+            opt = jax.device_put(init_opt_state(params),
+                                 plan.opt_shardings(p_sh))
+        state = {"params": params, "opt": opt}
+        d = tempfile.mkdtemp(prefix=f"bench_ckpt_{zero}_")
+        try:
+            mgr = CheckpointManager(d, plan=plan, keep=2)
+            stalls, writes, saves, resumes = [], [], [], []
+            for rep in range(3):
+                t0 = time.perf_counter()
+                mgr.save_async(state, 2 * rep + 1)
+                stalls.append(time.perf_counter() - t0)  # snapshot only
+                t0 = time.perf_counter()
+                mgr.flush()
+                writes.append(time.perf_counter() - t0)
+                t0 = time.perf_counter()
+                mgr.save(state, 2 * rep + 2)
+                saves.append(time.perf_counter() - t0)
+                t0 = time.perf_counter()
+                _, step = mgr.restore(state)
+                resumes.append(time.perf_counter() - t0)
+                assert step == 2 * rep + 2
+            man = mgr.manifest()
+            cases.append({
+                "tag": tag, "zero_extent": plan.mem["zero_extent"],
+                "bytes_per_host": man["bytes_per_host"],
+                "max_shards": max(e["shards"] for e in man["leaves"]),
+                "stall_ms": round(float(np.median(stalls)) * 1e3, 2),
+                "write_ms": round(float(np.median(writes)) * 1e3, 2),
+                "save_ms": round(float(np.median(saves)) * 1e3, 2),
+                "resume_ms": round(float(np.median(resumes)) * 1e3, 2),
+                "model_bytes_per_host": int(plan.mem["ckpt_bytes_host"]),
+            })
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+    print(json.dumps({"cases": cases}))
+
+
+def bench_ckpt(out_path: str = "BENCH_ckpt.json"):
+    """Plan-aware sharded checkpointing across ZeRO extents, written to
+    ``BENCH_ckpt.json``.
+
+    One worker subprocess (8 fake devices) saves+restores the same
+    reduced train state under extents 1 (replica), 2 (ZeRO over dp=2)
+    and 8 (dp·sp) and reports, per extent: the ``save_async`` **stall**
+    (the device→host snapshot — the only part that blocks the step
+    loop), the background write time, the blocking-save and
+    time-to-resume wall times, and the manifest's ``bytes_per_host``.
+    The layout claim under test: per-host checkpoint bytes shrink with
+    the ZeRO extent (each host serializes only its shards), so the
+    recorded ``bytes_shrink_with_extent`` must stay true.
+    """
+    import os
+    import subprocess
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root,
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    res = subprocess.run([sys.executable, os.path.abspath(__file__),
+                          "_ckpt_worker"], capture_output=True, text=True,
+                         timeout=900, env=env)
+    assert res.returncode == 0, res.stderr[-2000:]
+    data = json.loads(res.stdout.strip().splitlines()[-1])
+    bench = {"config": {"arch": "qwen3-1.7b", "seq_len": 64,
+                        "global_batch": 8, "devices": 8,
+                        "state": "params + opt (m, v, step)"},
+             "cases": data["cases"]}
+    by_extent = sorted(data["cases"], key=lambda c: c["zero_extent"])
+    bench["config"]["bytes_shrink_with_extent"] = all(
+        a["bytes_per_host"] > b["bytes_per_host"]
+        for a, b in zip(by_extent, by_extent[1:]))
+    for c in data["cases"]:
+        _row(f"ckpt.{c['tag']}.stall", c["stall_ms"] * 1e3,
+             f"bytes_per_host={c['bytes_per_host']};"
+             f"extent={c['zero_extent']};shards={c['max_shards']}")
+        _row(f"ckpt.{c['tag']}.resume", c["resume_ms"] * 1e3,
+             f"save_ms={c['save_ms']};write_ms={c['write_ms']}")
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=2)
+
+
 def main() -> None:
     sections = {"ring": micro_ring_step, "train": bench_train_step,
                 "serve": bench_serve, "tune": bench_tune,
-                "packed": bench_packed}
+                "packed": bench_packed, "ckpt": bench_ckpt}
+    if len(sys.argv) > 1 and sys.argv[1] == "_ckpt_worker":
+        _ckpt_worker()
+        return
     if len(sys.argv) > 1 and sys.argv[1] in sections:
         print("name,us_per_call,derived")
         sections[sys.argv[1]]()
@@ -569,6 +684,7 @@ def main() -> None:
     bench_serve()
     bench_tune()
     bench_packed()
+    bench_ckpt()
 
 
 if __name__ == "__main__":

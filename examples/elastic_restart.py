@@ -1,14 +1,22 @@
-"""Fault tolerance demo: train, 'lose a node', restore the checkpoint onto
-a different parallel layout (elastic resharding), keep training.
+"""Fault tolerance demo on the CheckpointManager: periodic async saves,
+a SIGTERM "preemption" flushed at the next step boundary, then an elastic
+restart that restores the sharded checkpoint onto a *different* parallel
+layout (dp=2/ZeRO extent 2 -> dp=4/extent 4) and keeps training.
 
     PYTHONPATH=src python examples/elastic_restart.py
+(uses 8 fake host devices; re-execs itself with XLA_FLAGS)
 """
-import sys, os, tempfile
+import os, signal, sys, tempfile
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.execv(sys.executable, [sys.executable] + sys.argv)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 from repro.configs import get_reduced
 from repro.core.plan import build_plan
+from repro.core.topology import ParallelConfig
+from repro.runtime import checkpoint as ckpt
 from repro.runtime.resilience import elastic_plan
 from repro.train.optimizer import OptConfig
 from repro.train.trainer import Trainer, TrainerConfig
@@ -17,28 +25,54 @@ from repro.train.trainer import Trainer, TrainerConfig
 def main():
     cfg = get_reduced("qwen3-1.7b")
     with tempfile.TemporaryDirectory() as d:
-        def mk(steps):
-            plan = build_plan(cfg,
-                              opt=OptConfig(lr=3e-3, total_steps=steps),
-                              devices=jax.devices()[:1],
-                              seq_len=64, global_batch=8)
-            return Trainer(plan, plan.data_config(64, 8),
-                           TrainerConfig(num_steps=steps, ckpt_dir=d,
-                                         ckpt_every=10, log_every=10))
+        def mk(dp, steps, every):
+            # same opt schedule across phases: the restore changes the
+            # layout, never the training trajectory
+            plan = build_plan(cfg, ParallelConfig(dp=dp),
+                              devices=jax.devices()[:dp],
+                              opt=OptConfig(lr=3e-3, total_steps=30),
+                              seq_len=64, global_batch=8, zero="dp",
+                              impl="ref")
+            return plan, Trainer(plan, plan.data_config(64, 8),
+                                 TrainerConfig(num_steps=steps, ckpt_dir=d,
+                                               ckpt_every=every,
+                                               log_every=5))
 
-        t1 = mk(20)
+        # phase 1: dp=2 (ZeRO extent 2), async saves every 4 steps
+        plan1, t1 = mk(2, 10, 4)
+        print(plan1.describe())
         losses = t1.run()
-        print(f"phase 1: {losses[0]:.3f} -> {losses[-1]:.3f}; "
-              f"checkpointed at step 20")
-        # "failure": new trainer = new process; restores & continues.
-        # elastic_plan picks a layout for whatever chips survive:
+        print(f"phase 1 (dp=2): {losses[0]:.3f} -> {losses[-1]:.3f}; "
+              f"saved steps {ckpt.list_steps(d)}")
+
+        # phase 2: a preemption notice lands mid-run — the installed
+        # PreemptionGuard defers it to the next step boundary, where the
+        # trainer flushes a final checkpoint and stops cleanly
+        _, t2 = mk(2, 30, 100)
+        assert t2.start_step == 8, t2.start_step      # resumed, no replay
+        os.kill(os.getpid(), signal.SIGTERM)
+        more = t2.run()
+        saved = ckpt.latest_step(d)
+        print(f"phase 2: SIGTERM after resume at step 8 -> ran "
+              f"{len(more)} step(s), flushed step {saved}")
+        assert saved == t2.start_step + len(more)
+
+        # "failure": restart on a different layout.  elastic_plan picks a
+        # grid for whatever chips survive; here we restore the extent-2
+        # checkpoint straight onto dp=4 (extent 4) — a reshard at load
+        # time, not a migration.
         print("elastic plan for 192 healthy chips:",
               elastic_plan(192, kv_heads=8, n_heads=16))
-        t2 = mk(30)
-        assert t2.start_step == 20
-        more = t2.run()
-        print(f"phase 2 (resumed): -> {more[-1]:.3f}")
-        assert more[-1] < losses[0]
+        plan3, t3 = mk(4, 16, 100)
+        assert t3.start_step == saved
+        m = t3.ckpter.manifest()
+        print(f"phase 3: restored step {saved} (saved under dp="
+              f"{m['plan']['dp']}, ZeRO extent {m['plan']['zero_extent']}, "
+              f"{m['bytes_per_host']} bytes/host) onto dp=4, extent "
+              f"{plan3.mem['zero_extent']}")
+        final = t3.run()
+        print(f"phase 3 (dp=4, resumed): -> {final[-1]:.3f}")
+        assert final[-1] < losses[0]
 
 
 if __name__ == "__main__":

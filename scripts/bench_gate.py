@@ -66,6 +66,15 @@ def _packed_specs(case):
                           ("blocks_frac", LOWER, 1.0)]
 
 
+def _ckpt_specs(case):
+    # stall/resume are host wall-clock (3× noise: filesystem + load);
+    # bytes_per_host is deterministic layout — any growth is a real
+    # sharding regression, so it gets no noise allowance.
+    return case["tag"], [("stall_ms", LOWER, 3.0),
+                         ("resume_ms", LOWER, 3.0),
+                         ("bytes_per_host", LOWER, 1.0)]
+
+
 #: bench file -> case-spec fn (see the (file, key, metrics) contract above)
 FILES = {
     "BENCH_ring.json": _ring_specs,
@@ -73,6 +82,7 @@ FILES = {
     "BENCH_serve.json": _serve_specs,
     "BENCH_tune.json": _tune_specs,
     "BENCH_packed.json": _packed_specs,
+    "BENCH_ckpt.json": _ckpt_specs,
 }
 
 BENCH_CMDS = {
@@ -81,6 +91,7 @@ BENCH_CMDS = {
     "BENCH_serve.json": "serve",
     "BENCH_tune.json": "tune",
     "BENCH_packed.json": "packed",
+    "BENCH_ckpt.json": "ckpt",
 }
 
 

@@ -5,10 +5,10 @@
 #                                # PlanTuner enumerate+score smoke
 #     scripts/check.sh           # full: all tests + benches + bench gate +
 #                                # plan/tune smoke + serve smoke + packed
-#                                # train smoke
+#                                # train smoke + elastic-restart smoke
 # The full tier rewrites BENCH_ring.json / BENCH_train_step.json /
-# BENCH_serve.json / BENCH_tune.json / BENCH_packed.json and diffs them
-# against the committed
+# BENCH_serve.json / BENCH_tune.json / BENCH_packed.json /
+# BENCH_ckpt.json and diffs them against the committed
 # baselines (scripts/bench_gate.py) so perf regressions on the ring hot
 # path, the (accumulated) train step, the serving engine, and the tuner's
 # picks show up immediately; the dryrun --plan [--tune] invocations fail
@@ -35,7 +35,9 @@ python benchmarks/run.py train
 python benchmarks/run.py serve
 python benchmarks/run.py tune
 python benchmarks/run.py packed
+python benchmarks/run.py ckpt
 python scripts/bench_gate.py
+python examples/elastic_restart.py
 python -m repro.launch.dryrun --plan --arch qwen3-1.7b --shape all
 python -m repro.launch.dryrun --plan --tune --arch qwen3-1.7b \
     --shape train_4k

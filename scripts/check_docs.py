@@ -31,6 +31,10 @@ SHELL_INFO = {"bash", "sh", "shell", "console", ""}
 FENCE_RE = re.compile(r"^```(\w*)\s*$")
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 ARG_RE = re.compile(r"""add_argument\(\s*['"](--[A-Za-z0-9-]+)['"]""")
+#: launchers share flag builders in repro/launch/args.py — a module
+#: importing it accepts those flags too (the static check follows the
+#: import; the live --help run proves it for real)
+SHARED_ARGS_RE = re.compile(r"repro\.launch(?:\.args|\s+import\s+args)")
 
 
 def doc_files(root: str) -> list[str]:
@@ -84,8 +88,17 @@ def module_source(root: str, module: str) -> str | None:
 
 
 def module_flags(path: str) -> set[str]:
+    """Flags a module accepts: its own ``add_argument`` calls, plus the
+    shared builders' when it imports ``repro.launch.args``."""
     with open(path) as f:
-        return set(ARG_RE.findall(f.read()))
+        src = f.read()
+    flags = set(ARG_RE.findall(src))
+    if SHARED_ARGS_RE.search(src):
+        shared = os.path.join(os.path.dirname(path), "args.py")
+        if os.path.exists(shared):
+            with open(shared) as f:
+                flags |= set(ARG_RE.findall(f.read()))
+    return flags
 
 
 def check_command(root: str, doc: str, ln: int, cmd: str, errors: list,

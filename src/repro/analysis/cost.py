@@ -15,8 +15,7 @@ model is re-based on ICI:
 Consumers: the PlanTuner (``repro/tune``) scores candidate
 ``ExecutionPlan``s with it, the roofline (``repro/analysis/roofline.py``)
 shares its hardware constants, and the paper-table benches
-(``benchmarks/run.py`` t2–t5, via the ``benchmarks/analytic.py`` shim)
-print it.  The formulas are *models*, cross-checked against dry-run
+(``benchmarks/run.py`` t2–t5) print it.  The formulas are *models*, cross-checked against dry-run
 collective bytes (see EXPERIMENTS.md §Roofline); the ``CostConstants``
 α factors are calibrated by on-host microbenchmarks
 (``repro/tune/calibrate.py``) and persisted, so predicted step times land
@@ -57,8 +56,8 @@ class CostConstants:
 V5E = CostConstants()
 
 # Module-level aliases — single source of truth for every consumer that
-# previously duplicated these numbers (benchmarks/analytic.py,
-# analysis/roofline.py).
+# previously duplicated these numbers (analysis/roofline.py and the
+# now-deprecated benchmarks/analytic.py shim).
 PEAK = V5E.peak
 HBM_BW = V5E.hbm
 ICI = V5E.ici

@@ -50,6 +50,9 @@ if TYPE_CHECKING:                                  # avoid core -> models
 STATE_BYTES_PER_PARAM = 12
 #: transient bf16 compute copy of the (matrix) params
 HALF_BYTES_PER_PARAM = 2
+#: assumed device→host snapshot bandwidth for the checkpoint-stall
+#: estimate (PCIe-gen4-ish); the disk side is hidden by the async writer
+CKPT_D2H_BYTES_PER_S = 16e9
 #: rough live activation width per token per layer, in units of
 #: d_model × 2 bytes: hidden + norms + q/k/v/o + gate/up intermediates
 #: when nothing is rematerialized; the saved-residual footprint per layer
@@ -223,6 +226,22 @@ class ExecutionPlan:
         return {"m": param_sh, "v": param_sh,
                 "step": NamedSharding(self.mesh, P())}
 
+    def state_shardings(self, state):
+        """NamedShardings for a trainer state dict: ``params``/``opt``
+        get the hybrid-ZeRO layout, anything else replicates.  This is
+        both the layout checkpoints are sharded by on save and the
+        target spec ``CheckpointManager.restore`` reshards through."""
+        out = {}
+        for key, sub in state.items():
+            if key == "params":
+                out[key] = self.param_shardings(sub)
+            elif key == "opt":
+                out[key] = self.opt_shardings(self.param_shardings(sub["m"]))
+            else:
+                out[key] = jax.tree.map(
+                    lambda _: NamedSharding(self.mesh, P()), sub)
+        return out
+
     def serve_shardings(self, params):
         """Weight-stationary (inference-TP) shardings for serving."""
         return tp_shardings(params, self.mesh)
@@ -371,6 +390,12 @@ class ExecutionPlan:
             f"acts≈{_fmt_bytes(m.get('act_dev', 0))} "
             f"total≈{_fmt_bytes(m.get('total_dev', 0))} "
             f"/ budget {_fmt_bytes(self.memory_budget)}")
+        lines.append(
+            f"  ckpt        bytes/host="
+            f"{_fmt_bytes(m.get('ckpt_bytes_host', 0))} "
+            f"(state/{m.get('zero_extent', 1)}) "
+            f"snapshot-stall≈{m.get('ckpt_stall_s', 0) * 1e3:.1f}ms "
+            f"(write async)")
         sv = self.serve_spec()
         if sv is None:
             lines.append(f"  serve       paged=n/a (family={cfg.family})")
@@ -450,9 +475,15 @@ def plan_memory(cfg, pc: ParallelConfig, *, grad_accum: int = 1,
     act_dev = (tokens_dev or 0) * cfg.d_model * 2 \
         * ACT_UNITS[policy] * cfg.num_layers
     total_dev = state_dev + half_dev + act_dev
+    # sharded-checkpoint footprint: each host serializes only its shards
+    # of the fp32 master + Adam moments, so bytes/host (and the blocking
+    # device→host snapshot stall) shrink with the ZeRO extent
+    ckpt_host = n_params * STATE_BYTES_PER_PARAM / extent
     mem = {"n_params": n_params, "state_dev": state_dev,
            "half_dev": half_dev, "act_dev": act_dev,
            "total_dev": total_dev,
+           "ckpt_bytes_host": ckpt_host,
+           "ckpt_stall_s": ckpt_host / CKPT_D2H_BYTES_PER_S,
            "zero_extent": extent, "microbatch": microbatch,
            "batch_shardable": batch_shardable,
            "fits_state": state_dev + half_dev

@@ -55,7 +55,28 @@ def _apply_layout(arr, perm, accum: int):
     return arr
 
 
-class SyntheticLM:
+class _StepIndexed:
+    """Step-indexed resume contract shared by both sources.
+
+    ``batch(step)`` depends only on ``(cfg.seed, step)``, so resuming
+    from a checkpoint is a *skip*, not a stream replay:
+    ``iter_batches(start_step)`` indexes straight to the step after the
+    restore point and the resumed run sees exactly the batches the
+    uninterrupted run would have (the kill-and-resume loss-parity check
+    in tests/_dist_checks.py pins this).
+    """
+
+    def iter_batches(self, start_step: int = 0,
+                     num_steps: int | None = None):
+        """Yield ``(step, batch)`` from ``start_step``, for ``num_steps``
+        steps (unbounded when None)."""
+        step = start_step
+        while num_steps is None or step < start_step + num_steps:
+            yield step, self.batch(step)
+            step += 1
+
+
+class SyntheticLM(_StepIndexed):
     """Synthetic next-token corpus: a fixed random Markov-ish stream.
 
     With ``grad_accum > 1`` every batch leaf carries a leading
@@ -128,7 +149,7 @@ def _doc_stream(vocab: int, length: int, rng) -> np.ndarray:
     return stream.astype(np.int32)
 
 
-class PackedLM:
+class PackedLM(_StepIndexed):
     """Packed-document corpus: variable-length synthetic documents
     bin-packed into fixed ``(accum, microbatch, seq)`` batches.
 

@@ -34,6 +34,7 @@ from repro.configs import get_config, get_parallel, all_arch_names  # noqa
 from repro.configs.common import SHAPES, applicable_shapes  # noqa: E402
 from repro.core.plan import ExecutionPlan                   # noqa: E402
 from repro.core.topology import ParallelConfig              # noqa: E402
+from repro.launch import args as launch_args                # noqa: E402
 from repro.launch.mesh import production_plan               # noqa: E402
 from repro.models.decode import (cache_shardings,           # noqa: E402
                                  decode_step, init_caches, prefill)
@@ -281,8 +282,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True,
-                    help="architecture id or 'all'")
+    launch_args.add_arch(ap, arch_help="architecture id or 'all'")
     ap.add_argument("--shape", default="all")
     ap.add_argument("--mesh", default="1pod",
                     choices=["1pod", "2pod", "both"])

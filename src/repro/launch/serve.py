@@ -11,7 +11,6 @@ run); ``--tune`` searches first and caches when ``--plan-file`` is given.
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 import numpy as np
@@ -21,6 +20,7 @@ import jax.numpy as jnp
 from repro.configs import get_config, get_parallel, get_reduced
 from repro.core.plan import build_plan
 from repro.core.topology import ParallelConfig
+from repro.launch import args as launch_args
 from repro.models.decode import decode_step, grow_caches, prefill
 from repro.models.model import init_params
 from repro.serve import SamplingParams, ServeEngine
@@ -72,7 +72,7 @@ def generate(params, cfg, rt, tokens, frames=None, gen: int = 16,
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    launch_args.add_arch(ap, smoke_help="reduced config on 1 device")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--batch", type=int, default=2,
@@ -88,12 +88,7 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
-    ap.add_argument("--tune", action="store_true",
-                    help="search the plan space for the attached devices")
-    ap.add_argument("--plan-file", default=None,
-                    help="TunedPlan JSON: consumed when it exists, "
-                         "written by --tune otherwise")
-    ap.add_argument("--smoke", action="store_true")
+    launch_args.add_plan_source(ap)
     args = ap.parse_args()
 
     if args.smoke:
@@ -107,27 +102,10 @@ def main():
 
     tuned = None
     if args.tune or args.plan_file:
-        from repro.tune import TunedPlan, tune
-        if args.plan_file and os.path.exists(args.plan_file):
-            tuned = TunedPlan.load(args.plan_file)
-            assert tuned.arch == args.arch, \
-                f"{args.plan_file} was tuned for {tuned.arch!r}, " \
-                f"not {args.arch!r}"
-            print(f"[serve] tuned plan from {args.plan_file} "
-                  f"(no re-search"
-                  + (": delete the file to re-search with --tune"
-                     if args.tune else "") + ")")
-        else:
-            result = tune(cfg, num_devices=len(jax.devices()),
-                          seq_len=args.prompt_len + args.gen,
-                          global_batch=args.batch,
-                          memory_budget_gb=1.0 if args.smoke else 16.0,
-                          accums=(1,), arch=args.arch)
-            print(result.table())
-            tuned = result.tuned_plan(page_size=args.page_size or 16)
-            if args.plan_file:
-                tuned.save(args.plan_file)
-                print(f"[serve] tuned plan cached -> {args.plan_file}")
+        tuned = launch_args.resolve_tuned(
+            args, cfg, seq=args.prompt_len + args.gen, gb=args.batch,
+            smoke=args.smoke, accums=(1,),
+            page_size=args.page_size or 16, tag="serve")
         pc, devices = tuned.parallel(), None
         if args.page_size is None:        # explicit flag beats the file
             args.page_size = tuned.page_size

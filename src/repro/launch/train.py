@@ -9,10 +9,17 @@ remat, microbatching — are made once by ``build_plan`` and printed via
 
     python -m repro.launch.train --arch qwen3-1.7b --steps 100 \
         --seq-len 4096 --global-batch 256 --hp 8 --inner 2 \
-        --grad-accum 4 --ckpt-dir /tmp/ckpt [--smoke]
+        --grad-accum 4 --ckpt-dir /tmp/ckpt --save-every 20 [--smoke]
 
 ``--smoke`` swaps in the reduced config + a 1-device mesh — the same code
 path end to end, laptop-sized.
+
+Checkpointing (``--ckpt-dir``): async per-shard saves every
+``--save-every`` steps through the plan-aware ``CheckpointManager``;
+SIGTERM flushes a final checkpoint at the next step boundary
+(``PreemptionGuard``), and a relaunch resumes from the latest step —
+even under a *different* plan (elastic restore-time resharding).
+``--no-resume`` starts fresh.
 
 ``--pack`` trains on packed documents (``PackedLM``): variable-length
 documents bin-packed into the sequence window with per-document
@@ -30,57 +37,21 @@ from __future__ import annotations
 
 import argparse
 import logging
-import os
 
 import jax
 
 from repro.configs import get_config, get_parallel, get_reduced
 from repro.core.plan import build_plan
 from repro.core.topology import ParallelConfig
+from repro.launch import args as launch_args
+from repro.launch.args import resolve_tuned   # noqa: F401  (re-export)
 from repro.train.optimizer import OptConfig
 from repro.train.trainer import Trainer, TrainerConfig
 
 
-def resolve_tuned(args, cfg, *, seq: int, gb: int, smoke: bool,
-                  packing: float = 1.0):
-    """--plan-file / --tune resolution: a cached TunedPlan wins; --tune
-    searches (and caches to --plan-file when given).  ``packing`` is the
-    packed-workload fraction (mean_doc_len / seq_len) the cost model
-    scores with — 1.0 for unpacked runs."""
-    from repro.tune import TunedPlan, tune
-    if args.plan_file and os.path.exists(args.plan_file):
-        tuned = TunedPlan.load(args.plan_file)
-        assert tuned.arch == args.arch, \
-            f"{args.plan_file} was tuned for {tuned.arch!r}, " \
-            f"not {args.arch!r} — delete it or pass the matching --arch"
-        print(f"[train] tuned plan from {args.plan_file}: "
-              f"dp{tuned.dp}/hp{tuned.hp}/cp{tuned.cp_outer}x"
-              f"{tuned.cp_inner}/{tuned.placement} accum="
-              f"{tuned.grad_accum} remat={tuned.remat} "
-              f"zero={tuned.zero} (no re-search)")
-        if args.tune:
-            print("[train] --tune ignored: cached plan exists "
-                  f"(delete {args.plan_file} to re-search)")
-        if (tuned.seq_len, tuned.global_batch) != (seq, gb):
-            print(f"[train] note: plan was tuned for seq="
-                  f"{tuned.seq_len} gb={tuned.global_batch}, "
-                  f"running seq={seq} gb={gb}")
-        return tuned
-    result = tune(cfg, num_devices=len(jax.devices()), seq_len=seq,
-                  global_batch=gb,
-                  memory_budget_gb=1.0 if smoke else 16.0,
-                  packing=packing, arch=args.arch)
-    print(result.table())
-    tuned = result.tuned_plan()
-    if args.plan_file:
-        tuned.save(args.plan_file)
-        print(f"[train] tuned plan cached -> {args.plan_file}")
-    return tuned
-
-
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    launch_args.add_arch(ap, smoke_help="reduced config on 1 device")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--seq-len", type=int, default=4096)
     ap.add_argument("--global-batch", type=int, default=256)
@@ -102,16 +73,8 @@ def main():
                          "stream (default: seq_len // 4); sets the data "
                          "source's length range and the cost model's "
                          "packing term")
-    ap.add_argument("--tune", action="store_true",
-                    help="search the plan space for the attached devices "
-                         "before training")
-    ap.add_argument("--plan-file", default=None,
-                    help="TunedPlan JSON: consumed when it exists, "
-                         "written by --tune otherwise")
-    ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--ckpt-every", type=int, default=50)
-    ap.add_argument("--smoke", action="store_true",
-                    help="reduced config on 1 device")
+    launch_args.add_plan_source(ap)
+    launch_args.add_checkpointing(ap)
     ap.add_argument("--distributed", action="store_true",
                     help="call jax.distributed.initialize()")
     args = ap.parse_args()
@@ -166,7 +129,8 @@ def main():
     trainer = Trainer(
         plan, plan.data_config(seq, gb),
         TrainerConfig(num_steps=args.steps, ckpt_dir=args.ckpt_dir,
-                      ckpt_every=args.ckpt_every))
+                      ckpt_every=launch_args.save_every(args),
+                      resume=args.resume))
     losses = trainer.run()
     print(f"final loss: {losses[-1]:.4f} "
           f"(median step {trainer.monitor.median:.3f}s)")

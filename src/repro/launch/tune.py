@@ -25,6 +25,7 @@ import argparse
 import os
 
 from repro.configs import get_config, get_reduced
+from repro.launch import args as launch_args
 from repro.tune import tune
 from repro.tune.calibrate import calibrate
 
@@ -35,7 +36,8 @@ def default_out(arch: str) -> str:
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    launch_args.add_arch(
+        ap, smoke_help="reduced config, host-sized space (CI smoke)")
     ap.add_argument("--num-devices", type=int, default=64)
     ap.add_argument("--pods", type=int, default=1)
     ap.add_argument("--dp", type=int, default=None,
@@ -57,8 +59,6 @@ def main():
     ap.add_argument("--out", default=None,
                     help="TunedPlan JSON path (default: "
                          "experiments/tuned/<arch>.json)")
-    ap.add_argument("--smoke", action="store_true",
-                    help="reduced config, host-sized space (CI smoke)")
     args = ap.parse_args()
 
     if args.smoke:

@@ -87,22 +87,40 @@ class StepMonitor:
 
 
 class PreemptionGuard:
-    """SIGTERM/SIGINT-triggered graceful-shutdown flag."""
+    """SIGTERM/SIGINT-triggered graceful-shutdown flag.
+
+    ``install`` stashes the handlers it displaces and ``uninstall``
+    puts them back, so a guard can be scoped (tests, nested trainers)
+    without clobbering the process's signal setup for good.
+    """
 
     def __init__(self, signals=(signal.SIGTERM,)):
         self.requested = False
         self._installed = False
         self._signals = signals
+        self._previous: dict = {}
 
     def install(self):
         if self._installed:
             return
         for s in self._signals:
             try:
-                signal.signal(s, self._handler)
+                self._previous[s] = signal.signal(s, self._handler)
             except ValueError:
                 pass  # not in main thread (tests)
         self._installed = True
+
+    def uninstall(self):
+        """Restore the handlers ``install`` displaced."""
+        if not self._installed:
+            return
+        for s, prev in self._previous.items():
+            try:
+                signal.signal(s, prev)
+            except ValueError:
+                pass
+        self._previous = {}
+        self._installed = False
 
     def _handler(self, signum, frame):
         self.requested = True

@@ -29,9 +29,10 @@ log = logging.getLogger("repro.trainer")
 class TrainerConfig:
     num_steps: int = 100
     ckpt_dir: str | None = None
-    ckpt_every: int = 50
+    ckpt_every: int = 50      # async-save cadence (steps)
     log_every: int = 10
     seed: int = 0
+    resume: bool = True       # auto-restore the latest step in ckpt_dir
 
 
 class Trainer:
@@ -61,16 +62,17 @@ class Trainer:
         self.start_step = 0
         self.ckpter = None
         if tcfg.ckpt_dir:
-            self.ckpter = ckpt.AsyncCheckpointer(tcfg.ckpt_dir)
-            last = ckpt.latest_step(tcfg.ckpt_dir)
-            if last is not None:
-                self.restore(last)
+            self.ckpter = ckpt.CheckpointManager(tcfg.ckpt_dir, plan=plan)
+            if tcfg.resume and self.ckpter.latest_step() is not None:
+                self.restore()
 
-    def restore(self, step: int):
+    def restore(self, step: int | None = None):
+        """Restore (latest step by default) through *this* run's plan:
+        the manager reassembles the saved shards and reshards them onto
+        the current layout — a checkpoint saved under a different
+        dp/ZeRO extent resumes here without migration."""
         state = {"params": self.params, "opt": self.opt_state}
-        shardings = {"params": self.p_sh, "opt": self.o_sh}
-        (state, _) = ckpt.restore(state, self.tcfg.ckpt_dir, step=step,
-                                  shardings=shardings)
+        state, step = self.ckpter.restore(state, step=step)
         self.params, self.opt_state = state["params"], state["opt"]
         self.start_step = step
         log.info("restored checkpoint at step %d", step)
@@ -84,10 +86,13 @@ class Trainer:
     def run(self):
         losses = []                    # device scalars until the end
         pending = 0                    # steps dispatched since last sync
+        remaining = self.tcfg.num_steps - self.start_step
         with self.plan.mesh:
             self.monitor.start()
-            for step in range(self.start_step, self.tcfg.num_steps):
-                batch = self.data.batch(step)
+            # deterministic resume: the source indexes by step, so a
+            # restored run *skips* to start_step instead of replaying
+            for step, batch in self.data.iter_batches(self.start_step,
+                                                      remaining):
                 self.params, self.opt_state, metrics = self.step_fn(
                     self.params, self.opt_state, batch)
                 pending += 1
@@ -95,21 +100,30 @@ class Trainer:
                     # the only in-loop host sync; step time is amortized
                     # over the steps dispatched since the previous sync
                     loss = float(metrics["loss"])
+                    n_flagged = len(self.monitor.flagged)
                     self.monitor.lap(pending)
                     pending = 0
                     log.info("step %d loss %.4f gnorm %.3f (%.2fs/step)",
                              step, loss, float(metrics["grad_norm"]),
                              self.monitor.median)
+                    for s, dt, med in self.monitor.flagged[n_flagged:]:
+                        log.warning("straggler flagged at step %d: "
+                                    "%.3fs vs median %.3fs", s, dt, med)
                 losses.append(metrics["loss"])
                 if self.ckpter and (step + 1) % self.tcfg.ckpt_every == 0:
                     self.save(step + 1)
                 if self.guard.requested:
-                    log.warning("preemption requested: flushing checkpoint")
+                    # SIGTERM landed: flush a final checkpoint at this
+                    # step boundary and stop cleanly
+                    log.warning("preemption requested: flushing "
+                                "checkpoint at step %d", step + 1)
                     self.save(step + 1)
+                    if self.ckpter:
+                        self.ckpter.flush()
                     break
             losses = [float(x) for x in jax.device_get(losses)]
             if pending:                # attribute the synced tail
                 self.monitor.lap(pending)
         if self.ckpter:
-            self.ckpter.wait()
+            self.ckpter.flush()
         return losses

@@ -14,7 +14,8 @@ pytestmark = pytest.mark.dist
 
 _CHECKS = ["attention_grid", "attention_modes", "ring_pallas_path", "ssm",
            "moe", "e2e_loss", "decode_consistency", "grad_compression",
-           "plan_placement", "accum_collectives", "packed_parity"]
+           "plan_placement", "accum_collectives", "packed_parity",
+           "ckpt_elastic"]
 
 
 @pytest.mark.parametrize("check", _CHECKS)

@@ -234,8 +234,14 @@ def test_attncase_from_plan():
     assert c.cp == 2
 
 
-def test_analytic_shim_reexports_shared_model():
-    import benchmarks.analytic as shim
+def test_analytic_shim_deprecated_but_identical():
+    import importlib
+    import warnings
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        import benchmarks.analytic as shim
+        shim = importlib.reload(shim)       # re-fire the import warning
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
     from repro.analysis import cost
     assert shim.AttnCase is cost.AttnCase
     assert shim.attention_op_time is cost.attention_op_time
