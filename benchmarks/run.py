@@ -660,12 +660,182 @@ def bench_ckpt(out_path: str = "BENCH_ckpt.json"):
         json.dump(bench, f, indent=2)
 
 
+def _offload_worker():
+    """Subprocess body for ``bench_offload`` (needs 8 fake devices for the
+    combined hp×cp grid).  Prints one JSON object on the last stdout line."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_reduced
+    from repro.core.attention2d import (Attn2DConfig, attention_2d,
+                                        chunked_attention_2d)
+    from repro.core.plan import plan_memory
+    from repro.core.topology import ParallelConfig, make_mesh
+    from repro.core.zigzag import from_zigzag, to_zigzag
+    from repro.runtime.offload import OffloadManager
+
+    cases = []
+
+    # -- memory model: longest trainable sequence at a fixed HBM budget.
+    # Deterministic (no wall clock anywhere): the chunk pipeline keeps
+    # only the active+prefetched fraction 2/C of the sequence-extensive
+    # bytes resident, so depth C buys exactly C/2× sequence once C >= 2.
+    cfg = get_reduced("qwen3-1.7b")
+    pc = ParallelConfig(dp=1, hp=2, cp_outer=2, cp_inner=2)
+    budget_gb = 0.05
+    base = None
+    for chunks in (1, 4, 8, 16):
+        _, _, _, mem = plan_memory(cfg, pc, remat="none",
+                                   memory_budget_gb=budget_gb,
+                                   seq_len=131072, global_batch=8,
+                                   offload_chunks=chunks)
+        ms = mem["max_seq_at_budget"]
+        if base is None:
+            base = ms
+        cases.append({
+            "kind": "max_seq", "tag": f"max_seq.off{chunks}",
+            "chunks": chunks, "max_seq_at_budget": int(ms),
+            "seq_ratio": round(ms / max(base, 1), 2),
+            "act_dev_bytes": int(mem["act_dev"]),
+            "act_host_bytes": int(mem["act_host"]),
+            "wire_ms": round(mem["offload_wire_s"] * 1e3, 3)})
+
+    # -- measured: chunked pipeline vs resident double-ring, same grid
+    acfg = Attn2DConfig(hp=pc.hp, n_out=pc.cp_outer, w=pc.cp_inner,
+                        causal=True, impl="ref")
+    mesh = make_mesh(pc)
+    cp = pc.cp
+    rng = np.random.default_rng(0)
+    B, S, H, HKV, D = 1, 512, 4, 2, 16
+    chunks = 4
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, HKV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, HKV, D)), jnp.float32)
+    do = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    qkv_bytes = sum(int(np.asarray(x).nbytes) for x in (q, k, v))
+
+    def resident_loss(q, k, v):
+        qz, kz, vz = (to_zigzag(x, cp) for x in (q, k, v))
+        out = attention_2d(qz, kz, vz, mesh=mesh, cfg=acfg)
+        return (from_zigzag(out, cp) * do).sum()
+
+    res_grad = jax.jit(jax.value_and_grad(resident_loss, argnums=(0, 1, 2)))
+
+    def run_resident():
+        with mesh:
+            return jax.block_until_ready(res_grad(q, k, v))
+
+    def run_chunked(mgr):
+        with mesh:
+            out, vjp = chunked_attention_2d(q, k, v, mesh=mesh, cfg=acfg,
+                                            chunks=chunks, offload=mgr)
+            return jax.block_until_ready((out, vjp(do)))
+
+    run_resident()                       # compile warm-up
+    run_chunked(OffloadManager())
+    times = {"resident": [], "chunked": []}
+    stats = None
+    for _ in range(5):
+        t0, c0 = time.perf_counter(), time.process_time()
+        run_resident()
+        times["resident"].append((time.perf_counter() - t0,
+                                  time.process_time() - c0))
+        mgr = OffloadManager()
+        t0, c0 = time.perf_counter(), time.process_time()
+        run_chunked(mgr)
+        times["chunked"].append((time.perf_counter() - t0,
+                                 time.process_time() - c0))
+        stats = mgr.stats()
+
+    med = {}
+    for mode in ("resident", "chunked"):
+        wall, cpu = zip(*times[mode])
+        med[mode] = {"wall_us": round(float(np.median(wall)) * 1e6, 1),
+                     "cpu_us": round(float(np.median(cpu)) * 1e6, 1)}
+    cases.append(dict(kind="step", tag="step.resident", mode="resident",
+                      **med["resident"]))
+    cases.append(dict(
+        kind="step", tag=f"step.chunked.off{chunks}", mode="chunked",
+        chunks=chunks, **med["chunked"],
+        overhead=round(med["chunked"]["wall_us"]
+                       / max(med["resident"]["wall_us"], 1e-9), 2),
+        stalls=int(stats["stalls"]),
+        peak_device_bytes=int(stats["peak_device_bytes"]),
+        peak_device_frac=round(stats["peak_device_bytes"]
+                               / max(qkv_bytes, 1), 3),
+        h2d_bytes=int(stats["h2d_bytes"]),
+        d2h_bytes=int(stats["d2h_bytes"])))
+    print(json.dumps({"cases": cases}))
+
+
+def bench_offload(out_path: str = "BENCH_offload.json"):
+    """FPDT sequence-chunk pipelining with host KV offload, written to
+    ``BENCH_offload.json``.
+
+    One worker subprocess (8 fake devices) records the two sides of the
+    offload trade:
+
+    * **max trainable sequence** at a fixed HBM budget, straight from the
+      plan memory model at depths 1/4/8/16 — deterministic, so the gate
+      allows no noise; the resident fraction is ``2/C`` (active + next
+      chunk), so depth 8 must buy ≥ 4× sequence over the resident
+      baseline (``seq_gain_4x_at_off8``).
+    * **step overhead**: measured fwd+bwd wall time of the chunked
+      pipeline (depth 4) against the resident double-ring on the same
+      combined hp=2 × cp=2x2 grid, with the ``OffloadManager``
+      telemetry — ``stalls`` must stay 0 (every chunk's H2D copy lands
+      before the pipeline reads it) and ``peak_device_frac`` records the
+      HBM residency actually held.
+    """
+    import os
+    import subprocess
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root,
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    res = subprocess.run([sys.executable, os.path.abspath(__file__),
+                          "_offload_worker"], capture_output=True,
+                         text=True, timeout=900, env=env)
+    assert res.returncode == 0, res.stderr[-2000:]
+    data = json.loads(res.stdout.strip().splitlines()[-1])
+    by = {c["tag"]: c for c in data["cases"]}
+    bench = {"config": {"arch": "qwen3-1.7b", "budget_gb": 0.05,
+                        "plan_seq_len": 131072, "devices": 8,
+                        "grid": "dp1.hp2.cp2x2",
+                        "seq_gain_4x_at_off8":
+                            by["max_seq.off8"]["seq_ratio"] >= 4.0,
+                        "pipeline_stalls":
+                            by["step.chunked.off4"]["stalls"]},
+             "cases": data["cases"]}
+    for c in data["cases"]:
+        if c["kind"] == "max_seq":
+            _row(f"offload.{c['tag']}", 0.0,
+                 f"max_seq={c['max_seq_at_budget']};"
+                 f"ratio={c['seq_ratio']}x;wire_ms={c['wire_ms']}")
+        elif c["mode"] == "resident":
+            _row("offload.step.resident", c["wall_us"],
+                 f"cpu_us={c['cpu_us']}")
+        else:
+            _row(f"offload.{c['tag']}", c["wall_us"],
+                 f"overhead={c['overhead']}x;stalls={c['stalls']};"
+                 f"peak_dev_frac={c['peak_device_frac']}")
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=2)
+
+
 def main() -> None:
     sections = {"ring": micro_ring_step, "train": bench_train_step,
                 "serve": bench_serve, "tune": bench_tune,
-                "packed": bench_packed, "ckpt": bench_ckpt}
+                "packed": bench_packed, "ckpt": bench_ckpt,
+                "offload": bench_offload}
     if len(sys.argv) > 1 and sys.argv[1] == "_ckpt_worker":
         _ckpt_worker()
+        return
+    if len(sys.argv) > 1 and sys.argv[1] == "_offload_worker":
+        _offload_worker()
         return
     if len(sys.argv) > 1 and sys.argv[1] in sections:
         print("name,us_per_call,derived")
@@ -685,6 +855,7 @@ def main() -> None:
     bench_tune()
     bench_packed()
     bench_ckpt()
+    bench_offload()
 
 
 if __name__ == "__main__":

@@ -75,6 +75,21 @@ def _ckpt_specs(case):
                          ("bytes_per_host", LOWER, 1.0)]
 
 
+def _offload_specs(case):
+    # max-seq rows come straight from the deterministic plan memory model
+    # — no noise allowance: the seq ratio vs the resident baseline (≥ 4×
+    # at depth 8) is the headline claim.  Step rows are host wall-clock
+    # of the ref-impl pipeline (3× noise); the chunked row's stall count
+    # is deterministic pipeline correctness (prefetch must stay ahead).
+    if case["kind"] == "max_seq":
+        return case["tag"], [("max_seq_at_budget", HIGHER, 1.0),
+                             ("seq_ratio", HIGHER, 1.0)]
+    specs = [("wall_us", LOWER, 3.0), ("cpu_us", LOWER, 3.0)]
+    if case["mode"] == "chunked":
+        specs += [("overhead", LOWER, 3.0), ("stalls", LOWER, 1.0)]
+    return case["tag"], specs
+
+
 #: bench file -> case-spec fn (see the (file, key, metrics) contract above)
 FILES = {
     "BENCH_ring.json": _ring_specs,
@@ -83,6 +98,7 @@ FILES = {
     "BENCH_tune.json": _tune_specs,
     "BENCH_packed.json": _packed_specs,
     "BENCH_ckpt.json": _ckpt_specs,
+    "BENCH_offload.json": _offload_specs,
 }
 
 BENCH_CMDS = {
@@ -92,6 +108,7 @@ BENCH_CMDS = {
     "BENCH_tune.json": "tune",
     "BENCH_packed.json": "packed",
     "BENCH_ckpt.json": "ckpt",
+    "BENCH_offload.json": "offload",
 }
 
 

@@ -8,7 +8,7 @@
 #                                # train smoke + elastic-restart smoke
 # The full tier rewrites BENCH_ring.json / BENCH_train_step.json /
 # BENCH_serve.json / BENCH_tune.json / BENCH_packed.json /
-# BENCH_ckpt.json and diffs them against the committed
+# BENCH_ckpt.json / BENCH_offload.json and diffs them against the committed
 # baselines (scripts/bench_gate.py) so perf regressions on the ring hot
 # path, the (accumulated) train step, the serving engine, and the tuner's
 # picks show up immediately; the dryrun --plan [--tune] invocations fail
@@ -36,6 +36,7 @@ python benchmarks/run.py serve
 python benchmarks/run.py tune
 python benchmarks/run.py packed
 python benchmarks/run.py ckpt
+python benchmarks/run.py offload
 python scripts/bench_gate.py
 python examples/elastic_restart.py
 python -m repro.launch.dryrun --plan --arch qwen3-1.7b --shape all

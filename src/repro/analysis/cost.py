@@ -39,6 +39,7 @@ class CostConstants:
     peak: float = 197e12          # bf16 FLOP/s per chip
     hbm: float = 819e9            # HBM B/s per chip
     ici: float = 50e9             # B/s per ICI link
+    pcie: float = 16e9            # host↔device B/s (chunk-offload wire)
     major_penalty: float = 0.5    # effective bw multiplier, ICI-major axes
     bytes_per_el: int = 2         # bf16
     #: measured/nominal efficiency factors (calibration output)
@@ -46,6 +47,7 @@ class CostConstants:
     alpha_p2p: float = 1.0        # achieved ring p2p bw / nominal
     alpha_a2a: float = 1.0        # achieved AlltoAll bw / nominal
     alpha_rsag: float = 1.0       # achieved RS/AG bw / nominal
+    alpha_pcie: float = 1.0       # achieved host↔device bw / nominal
     source: str = "v5e-nominal"
 
     @property
@@ -82,6 +84,11 @@ class AttnCase:
     #: the compute/communication balance the tuner ranks on.  The kernel
     #: realizes the reduction via doc-aware block skipping.
     packing: float = 1.0
+    #: FPDT chunk pipeline: sequence chunks streamed through attention
+    #: with inactive K/V in host memory (1 = fully resident).  Adds the
+    #: PCIe wire term ``offload_wire_time`` that the tuner trades
+    #: against the HBM the offload frees.
+    offload_chunks: int = 1
 
     @property
     def cp(self) -> int:
@@ -101,7 +108,8 @@ class AttnCase:
         return cls(s=s, d=cfg.d_model, h=cfg.n_heads,
                    h_kv=cfg.n_kv_heads, sp=pc.sp, hp=pc.hp,
                    w=pc.cp_inner, placement=pc.placement,
-                   packing=getattr(plan, "packing_frac", 1.0))
+                   packing=getattr(plan, "packing_frac", 1.0),
+                   offload_chunks=getattr(plan, "offload_chunks", 1))
 
 
 def attn_flops_per_device(c: AttnCase) -> float:
@@ -166,6 +174,26 @@ def attention_op_time(c: AttnCase, *, backward: bool = False,
     return alltoall_time(c, const) * (2.0 if backward else 1.0) + ring
 
 
+def offload_wire_time(c: AttnCase, const: CostConstants = V5E) -> float:
+    """Per-layer host↔device wire seconds of the FPDT chunk pipeline.
+
+    With C chunks, KV chunk j is re-fetched from host for every q-chunk
+    i ≥ j — ≈ (C+1)/2 copies of the local K+V per direction (forward and
+    backward each run the full causal pair schedule) — plus ~4 q-sized
+    one-shot tensors (q/out/lse staging forward, do + grads home on the
+    backward).  The copies are double-buffered against ring steps, so
+    this is a *floor* the attention time is maxed against, not an
+    additive serial term.
+    """
+    if c.offload_chunks <= 1:
+        return 0.0
+    kv = kv_chunk_bytes(c, const)
+    q = 2.0 * c.s * c.d / c.sp * const.bytes_per_el
+    refetch = (c.offload_chunks + 1) / 2.0
+    wire = 2.0 * refetch * kv + 4.0 * q
+    return wire / (const.pcie * const.alpha_pcie)
+
+
 def layer_linear_flops(d: int, d_ff: int, s: int, h: int, hd: int,
                        h_kv: int) -> float:
     qkvo = 2.0 * s * d * (h * hd + 2 * h_kv * hd + h * hd)
@@ -193,7 +221,12 @@ def layer_step_time(c: AttnCase, *, d_ff: int = 11008,
         + attention_op_time(c, backward=True, const=const)
     if remat == "full":
         t_attn += attention_op_time(c, const=const)
+    t_wire = offload_wire_time(c, const)
+    # chunk H2D/D2H copies are double-buffered against ring steps: the
+    # pipeline runs at whichever of compute or wire is slower
+    t_attn = max(t_attn, t_wire)
     return {"linear_s": t_lin, "attn_s": t_attn,
+            "offload_s": t_wire,
             "lin_flops": lin_flops,
             "attn_flops": attn_flops_per_device(c)}
 
@@ -240,7 +273,8 @@ def train_step_time(c: AttnCase, *, d_ff: int = 11008, n_layers: int = 32,
     return {"total_s": t_math + t_zero + t_accum,
             "math_s": t_math, "zero_s": t_zero, "accum_s": t_accum,
             "linear_s": layer["linear_s"] * n_layers * seqs_per_group,
-            "attn_s": layer["attn_s"] * n_layers * seqs_per_group}
+            "attn_s": layer["attn_s"] * n_layers * seqs_per_group,
+            "offload_s": layer["offload_s"] * n_layers * seqs_per_group}
 
 
 def end_to_end_mfu(c: AttnCase, *, d_ff: int = 11008, n_layers: int = 32,

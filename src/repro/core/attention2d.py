@@ -52,6 +52,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.runtime import shard_map_compat as _shard_map
 from repro.core.topology import (AXIS_HP, AXIS_INNER, AXIS_OUTER, BATCH_AXES,
                                  SEQ_AXES)
+from repro.core.zigzag import from_zigzag, to_zigzag
 from repro.kernels.ops import flash_attention, flash_bwd_chunk, flash_fwd_chunk
 from repro.kernels.ref import BandMask, combine_pair
 
@@ -133,25 +134,40 @@ def _kw(cfg: RingConfig):
 # Ring forward
 # ---------------------------------------------------------------------------
 
-def _step_band(cfg: RingConfig, i, j, s_loc: int) -> BandMask:
+def _step_band(cfg: RingConfig, i, j, s_loc: int, qb=0, kb=0) -> BandMask:
     """The (i, j) ring-step mask as a BandMask over the full local shapes.
 
     ``i``/``j`` are traced rank indices; the offsets land in the kernels as
     scalar-prefetch operands, so the case split (j<i full, j=i diagonal,
     j>i empty/half) happens inside one kernel call via logical-position
     masking + block skip — no ``lax.cond`` branch pair.
+
+    ``qb``/``kb`` are global sequence-chunk bases (the FPDT chunk pipeline
+    runs this same ring once per chunk pair; each side's logical positions
+    shift by its chunk start).  The resident path passes 0/0.
     """
     if cfg.zigzag:
-        return BandMask.zigzag(i, j, s_loc // 2, cfg.cp)
-    # Contiguous chunks (no causal load balance): chunk r = cp rank r.
-    # Used by hybrid/SSM models whose recurrent layers need contiguous
-    # sequence shards; the paper's balanced layout needs the zigzag data
-    # permutation which those layers cannot tolerate.
-    return BandMask.uniform((i - j) * s_loc)
+        band = BandMask.zigzag(i, j, s_loc // 2, cfg.cp)
+    else:
+        # Contiguous chunks (no causal load balance): chunk r = cp rank r.
+        # Used by hybrid/SSM models whose recurrent layers need contiguous
+        # sequence shards; the paper's balanced layout needs the zigzag data
+        # permutation which those layers cannot tolerate.  Absolute offsets
+        # on both sides (not the relative ``(i-j)·s_loc`` single-sided form)
+        # keep packed-document doc-start comparisons — global positions —
+        # correct; causal/window masking only sees the difference, which is
+        # unchanged.
+        band = BandMask(i * s_loc, i * s_loc, j * s_loc, j * s_loc, 0, 0)
+    if isinstance(qb, int) and isinstance(kb, int) and qb == 0 and kb == 0:
+        return band           # resident path: skip the no-op adds
+    return band._replace(q_off_lo=band.q_off_lo + qb,
+                         q_off_hi=band.q_off_hi + qb,
+                         k_off_lo=band.k_off_lo + kb,
+                         k_off_hi=band.k_off_hi + kb)
 
 
 def _step_fwd(q, kc, vc, doc, o: int, t: int, i_out, i_in, i,
-              cfg: RingConfig):
+              cfg: RingConfig, qb=0, kb=0):
     """Partial (out, lse) of local q against the visiting KV chunk pair.
 
     ``doc`` (packed documents) is the *local* per-row doc-start table: it
@@ -164,11 +180,11 @@ def _step_fwd(q, kc, vc, doc, o: int, t: int, i_out, i_in, i,
         return flash_fwd_chunk(q, kc, vc, causal=False, **kw)
     j = _visiting(cfg, i_out, i_in, o, t)
     return flash_fwd_chunk(q, kc, vc, causal=True, window=cfg.window,
-                           band=_step_band(cfg, i, j, q.shape[1]),
+                           band=_step_band(cfg, i, j, q.shape[1], qb, kb),
                            q_doc_start=doc, **kw)
 
 
-def _ring_fwd(q, k, v, doc, cfg: RingConfig):
+def _ring_fwd(q, k, v, doc, cfg: RingConfig, qb=0, kb=0):
     i_out, i_in, i = _ring_indices(cfg)
     acc_o = None
     acc_l = None
@@ -186,7 +202,8 @@ def _ring_fwd(q, k, v, doc, cfg: RingConfig):
             if t < cfg.w - 1:
                 nxt_inner = (_shift(kc, cfg.axis_inner, cfg.w),
                              _shift(vc, cfg.axis_inner, cfg.w))
-            po, pl_ = _step_fwd(q, kc, vc, doc, o, t, i_out, i_in, i, cfg)
+            po, pl_ = _step_fwd(q, kc, vc, doc, o, t, i_out, i_in, i, cfg,
+                                qb, kb)
             if acc_o is None:
                 acc_o, acc_l = po.astype(jnp.float32), pl_
             else:
@@ -203,7 +220,7 @@ def _ring_fwd(q, k, v, doc, cfg: RingConfig):
 # ---------------------------------------------------------------------------
 
 def _step_bwd(q, kc, vc, out, lse, do, doc, o: int, t: int, i_out, i_in, i,
-              cfg: RingConfig):
+              cfg: RingConfig, qb=0, kb=0):
     """(dq_part, dk_part, dv_part) for the KV chunk visiting at (o, t).
 
     ``out``/``lse`` are the final combined values (global softmax), so each
@@ -215,11 +232,11 @@ def _step_bwd(q, kc, vc, out, lse, do, doc, o: int, t: int, i_out, i_in, i,
     j = _visiting(cfg, i_out, i_in, o, t)
     return flash_bwd_chunk(q, kc, vc, out, lse, do, causal=True,
                            window=cfg.window,
-                           band=_step_band(cfg, i, j, q.shape[1]),
+                           band=_step_band(cfg, i, j, q.shape[1], qb, kb),
                            q_doc_start=doc, **kw)
 
 
-def _ring_bwd(q, k, v, out, lse, do, doc, cfg: RingConfig):
+def _ring_bwd(q, k, v, out, lse, do, doc, cfg: RingConfig, qb=0, kb=0):
     i_out, i_in, i = _ring_indices(cfg)
     dq = jnp.zeros(q.shape, jnp.float32)
     k0, v0 = k, v
@@ -229,7 +246,7 @@ def _ring_bwd(q, k, v, out, lse, do, doc, cfg: RingConfig):
         kc, vc, dkc, dvc = k0, v0, dk0, dv0
         for t in range(cfg.w):
             dq_p, dk_p, dv_p = _step_bwd(q, kc, vc, out, lse, do, doc, o, t,
-                                         i_out, i_in, i, cfg)
+                                         i_out, i_in, i, cfg, qb, kb)
             dq = dq + dq_p.astype(jnp.float32)
             dkc = dkc + dk_p.astype(jnp.float32)
             dvc = dvc + dv_p.astype(jnp.float32)
@@ -353,3 +370,296 @@ def attention_2d(q, k, v, *, mesh, cfg: Attn2DConfig, doc_start=None):
         lambda q, k, v, d: attention_2d_local(q, k, v, cfg, doc_start=d),
         mesh, (spec, spec, spec, spec_d), spec)
     return f(q, k, v, jnp.asarray(doc_start, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Sequence-chunk pipelining with host KV offload (FPDT, arxiv 2408.16978)
+# ---------------------------------------------------------------------------
+#
+# The resident path above holds the entire local sequence in HBM, so max
+# trainable context is capped by device memory regardless of mesh size.
+# The chunked path splits the *global* sequence into C chunks, keeps only
+# the active (and prefetched) chunks in HBM via an OffloadManager, and
+# runs the same double-ring/Ulysses machinery once per causal chunk pair
+# (i, j<=i).  The pair kernels are the resident ones: the only change is
+# that each side's BandMask logical positions shift by its chunk base
+# (qb = i·Sc, kb = j·Sc), so zigzag, packed-document doc starts (global
+# positions — boundaries straddling chunk edges included), GQA folding
+# and block skip all fall out unchanged.  Per-pair FLOPs match the causal
+# half at chunk granularity: pair j<i is all-visible, j=i is the ordinary
+# zigzag diagonal.
+#
+# Host staging is opaque to jax.grad (tracers cannot cross np.asarray), so
+# the driver is an explicit forward + manual vjp: a host Python loop over
+# two jitted shard_map programs (one forward pair, one backward pair),
+# qb/kb passed as traced int32 scalars so a single compile serves every
+# pair.  Forward accumulates (out, lse) partials with the flash combine
+# rule; backward accumulates dq on device and sends dk/dv home to host
+# fp32 accumulators chunk by chunk.
+
+def _chunk_ring_cfg(cfg: Attn2DConfig, dh: int) -> RingConfig:
+    scale = cfg.scale if cfg.scale is not None else 1.0 / (dh ** 0.5)
+    return RingConfig(n_out=cfg.n_out, w=cfg.w, causal=True,
+                      zigzag=cfg.zigzag, window=None, softcap=cfg.softcap,
+                      scale=scale, impl=cfg.impl, axis_outer=cfg.axis_outer,
+                      axis_inner=cfg.axis_inner)
+
+
+def _chunk_pair_fwd_local(q, k, v, doc, qb, kb, cfg: Attn2DConfig):
+    """Per-shard (out, lse) of q-chunk (base qb) against kv-chunk (kb)."""
+    dh = q.shape[-1]
+    hkv = k.shape[2]
+    rcfg = _chunk_ring_cfg(cfg, dh)
+    if cfg.hp > hkv:
+        rep = cfg.hp // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    if cfg.hp > 1:
+        q = lax.all_to_all(q, cfg.axis_hp, 2, 1, tiled=True)
+        k = lax.all_to_all(k, cfg.axis_hp, 2, 1, tiled=True)
+        v = lax.all_to_all(v, cfg.axis_hp, 2, 1, tiled=True)
+        if doc is not None:
+            doc = lax.all_gather(doc, cfg.axis_hp, axis=1, tiled=True)
+    out, lse = _ring_fwd(q, k, v, doc, rcfg, qb, kb)
+    if cfg.hp > 1:
+        out = lax.all_to_all(out, cfg.axis_hp, 1, 2, tiled=True)
+        lse = lax.all_to_all(lse, cfg.axis_hp, 2, 1, tiled=True)
+    return out, lse
+
+
+def _chunk_pair_bwd_local(q, k, v, out, lse, do, doc, qb, kb,
+                          cfg: Attn2DConfig):
+    """Per-shard (dq, dk, dv) contribution of one (q-chunk, kv-chunk) pair.
+
+    ``out``/``lse`` are the chunk's *final* combined values, so every
+    pair's contribution is exact and linear (same argument as the ring
+    backward's per-step decomposition).
+    """
+    dh = q.shape[-1]
+    hkv = k.shape[2]
+    rcfg = _chunk_ring_cfg(cfg, dh)
+    rep = cfg.hp // hkv if cfg.hp > hkv else 1
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    if cfg.hp > 1:
+        q, k, v, out, do = (lax.all_to_all(x, cfg.axis_hp, 2, 1, tiled=True)
+                            for x in (q, k, v, out, do))
+        lse = lax.all_to_all(lse, cfg.axis_hp, 1, 2, tiled=True)
+        if doc is not None:
+            doc = lax.all_gather(doc, cfg.axis_hp, axis=1, tiled=True)
+    dq, dk, dv = _ring_bwd(q, k, v, out, lse, do, doc, rcfg, qb, kb)
+    if cfg.hp > 1:
+        dq, dk, dv = (lax.all_to_all(x, cfg.axis_hp, 1, 2, tiled=True)
+                      for x in (dq, dk, dv))
+    if rep > 1:
+        bb, ss, _, dd = dk.shape
+        # jnp.repeat is consecutive, so replica grads group-sum by reshape.
+        dk = dk.reshape(bb, ss, hkv, rep, dd).sum(3)
+        dv = dv.reshape(bb, ss, hkv, rep, dd).sum(3)
+    return dq, dk, dv
+
+
+@functools.lru_cache(maxsize=32)
+def _chunk_pair_fns(mesh, cfg: Attn2DConfig, has_doc: bool):
+    """(fwd, bwd) jitted global-array pair programs for (mesh, cfg).
+
+    One compile serves all (i, j) pairs: the chunk bases ride in as traced
+    int32 scalars (they land in the kernels as scalar-prefetch operands,
+    exactly like the ring's rank indices)."""
+    spec = P(BATCH_AXES, SEQ_AXES, None, None)
+    spec_l = P(BATCH_AXES, None, SEQ_AXES)
+    spec_d = P(BATCH_AXES, SEQ_AXES)
+    sc = P()
+    if has_doc:
+        fwd = _shard_map(
+            lambda q, k, v, d, qb, kb:
+                _chunk_pair_fwd_local(q, k, v, d, qb, kb, cfg),
+            mesh, (spec, spec, spec, spec_d, sc, sc), (spec, spec_l))
+        bwd = _shard_map(
+            lambda q, k, v, o, l, g, d, qb, kb:
+                _chunk_pair_bwd_local(q, k, v, o, l, g, d, qb, kb, cfg),
+            mesh, (spec, spec, spec, spec, spec_l, spec, spec_d, sc, sc),
+            (spec, spec, spec))
+    else:
+        fwd = _shard_map(
+            lambda q, k, v, qb, kb:
+                _chunk_pair_fwd_local(q, k, v, None, qb, kb, cfg),
+            mesh, (spec, spec, spec, sc, sc), (spec, spec_l))
+        bwd = _shard_map(
+            lambda q, k, v, o, l, g, qb, kb:
+                _chunk_pair_bwd_local(q, k, v, o, l, g, None, qb, kb, cfg),
+            mesh, (spec, spec, spec, spec, spec_l, spec, sc, sc),
+            (spec, spec, spec))
+    return jax.jit(fwd), jax.jit(bwd)
+
+
+@jax.jit
+def _combine_chunks(oa, la, ob, lb):
+    return combine_pair(oa, la, ob, lb)
+
+
+@jax.jit
+def _acc(a, b):
+    return a + b
+
+
+class ChunkedAttention:
+    """FPDT-style sequence-chunk pipelined 2D-Attention with KV offload.
+
+    Inputs and outputs are in *logical* token order over the full
+    sequence; the per-chunk zigzag layout is applied internally (each
+    chunk is independently balanced over the cp ranks, so the resident
+    ring kernels apply per pair unchanged).  Causal, full-context only
+    (``window`` needs no offload — its KV footprint is already bounded).
+
+    The manager's HBM budget covers staged chunk residency; with the
+    double-buffer schedule the peak is the active pair plus the
+    prefetched next K/V (≈ q + 2·(k+v) chunk shards on the forward,
+    plus out/lse/do on the backward).
+
+    Usage::
+
+        ca = ChunkedAttention(mesh, cfg, chunks=8)
+        out = ca.forward(q, k, v)          # logical order
+        dq, dk, dv = ca.vjp(d_out)         # manual vjp (host loop is
+                                           # opaque to jax.grad)
+    """
+
+    def __init__(self, mesh, cfg: Attn2DConfig, *, chunks: int,
+                 offload=None):
+        assert cfg.causal, "chunk pipelining is causal-only"
+        assert cfg.window is None, \
+            "sliding-window KV is already bounded; no offload needed"
+        assert chunks >= 1, chunks
+        if offload is None:
+            from repro.runtime.offload import OffloadManager
+            offload = OffloadManager()
+        self.mesh, self.cfg, self.chunks = mesh, cfg, chunks
+        self.mgr = offload
+        self._docs = None
+        self._sc = None
+        self._dtypes = None
+
+    # -- layout helpers ----------------------------------------------------
+
+    def _lay(self, x):
+        return to_zigzag(x, self.cfg.cp) if self.cfg.zigzag else x
+
+    def _unlay(self, x):
+        return from_zigzag(x, self.cfg.cp) if self.cfg.zigzag else x
+
+    def _stage(self, name: str, x, sc: int):
+        """Slice ``x`` into chunks, per-chunk zigzag, snapshot to host."""
+        for i in range(self.chunks):
+            self.mgr.put((name, i), self._lay(x[:, i * sc:(i + 1) * sc]))
+
+    # -- forward -----------------------------------------------------------
+
+    def forward(self, q, k, v, doc_start=None):
+        C, cp = self.chunks, self.cfg.cp
+        S = q.shape[1]
+        assert S % C == 0, (S, C)
+        sc = S // C
+        if self.cfg.zigzag and cp > 1:
+            assert sc % (2 * cp) == 0, \
+                f"chunk len {sc} must split into 2·cp={2 * cp} zigzag " \
+                f"sub-chunks"
+        self._sc = sc
+        self._dtypes = (q.dtype, k.dtype, v.dtype)
+        fwd, _ = _chunk_pair_fns(self.mesh, self.cfg, doc_start is not None)
+        for name, x in (("q", q), ("k", k), ("v", v)):
+            self._stage(name, x, sc)
+        self._docs = None
+        if doc_start is not None:
+            d = jnp.asarray(doc_start, jnp.int32)
+            self._docs = [self._lay(d[:, i * sc:(i + 1) * sc])
+                          for i in range(C)]
+        mgr, outs = self.mgr, []
+        for i in range(C):
+            mgr.prefetch(("q", i))
+            qi = mgr.get(("q", i))
+            di = () if self._docs is None else (self._docs[i],)
+            mgr.prefetch(("k", 0))
+            mgr.prefetch(("v", 0))
+            acc_o = acc_l = None
+            for j in range(i + 1):
+                if j < i:   # double buffer: next fetch overlaps this pair
+                    mgr.prefetch(("k", j + 1))
+                    mgr.prefetch(("v", j + 1))
+                kj, vj = mgr.get(("k", j)), mgr.get(("v", j))
+                po, pl_ = fwd(qi, kj, vj, *di,
+                              jnp.asarray(i * sc, jnp.int32),
+                              jnp.asarray(j * sc, jnp.int32))
+                if acc_o is None:
+                    acc_o, acc_l = po.astype(jnp.float32), pl_
+                else:
+                    acc_o, acc_l = _combine_chunks(acc_o, acc_l, po, pl_)
+                mgr.release(("k", j))
+                mgr.release(("v", j))
+            out_i = acc_o.astype(q.dtype)
+            mgr.put(("o", i), out_i)       # saved residuals for the vjp
+            mgr.put(("l", i), acc_l)
+            mgr.release(("q", i))
+            outs.append(self._unlay(out_i))
+        return jnp.concatenate(outs, axis=1)
+
+    # -- backward ----------------------------------------------------------
+
+    def vjp(self, do):
+        """(dq, dk, dv) in logical order given the output cotangent."""
+        assert self._sc is not None, "forward() first"
+        C, sc = self.chunks, self._sc
+        qdt, kdt, vdt = self._dtypes
+        _, bwd = _chunk_pair_fns(self.mesh, self.cfg, self._docs is not None)
+        mgr = self.mgr
+        self._stage("g", do, sc)
+        dqs = []
+        for i in range(C):
+            for key in (("q", i), ("g", i), ("o", i), ("l", i)):
+                mgr.prefetch(key)
+            qi, gi = mgr.get(("q", i)), mgr.get(("g", i))
+            oi, li = mgr.get(("o", i)), mgr.get(("l", i))
+            di = () if self._docs is None else (self._docs[i],)
+            mgr.prefetch(("k", 0))
+            mgr.prefetch(("v", 0))
+            dq_i = None
+            for j in range(i + 1):
+                if j < i:
+                    mgr.prefetch(("k", j + 1))
+                    mgr.prefetch(("v", j + 1))
+                kj, vj = mgr.get(("k", j)), mgr.get(("v", j))
+                dq_p, dk_p, dv_p = bwd(qi, kj, vj, oi, li, gi, *di,
+                                       jnp.asarray(i * sc, jnp.int32),
+                                       jnp.asarray(j * sc, jnp.int32))
+                dq_i = dq_p if dq_i is None else _acc(dq_i, dq_p)
+                # dk/dv come home chunk by chunk: host fp32 accumulation.
+                mgr.accumulate(("dk", j), dk_p)
+                mgr.accumulate(("dv", j), dv_p)
+                mgr.release(("k", j))
+                mgr.release(("v", j))
+            dqs.append(self._unlay(dq_i))
+            for key in (("q", i), ("g", i), ("o", i), ("l", i)):
+                mgr.release(key)
+        dq = jnp.concatenate(dqs, axis=1).astype(qdt)
+        dk = jnp.concatenate(
+            [self._unlay(jnp.asarray(mgr.host_array(("dk", j))))
+             for j in range(C)], axis=1).astype(kdt)
+        dv = jnp.concatenate(
+            [self._unlay(jnp.asarray(mgr.host_array(("dv", j))))
+             for j in range(C)], axis=1).astype(vdt)
+        return dq, dk, dv
+
+
+def chunked_attention_2d(q, k, v, *, mesh, cfg: Attn2DConfig, chunks: int,
+                         doc_start=None, offload=None):
+    """Forward + manual-vjp entry point for the chunk pipeline.
+
+    Returns ``(out, vjp_fn)`` with ``vjp_fn(d_out) -> (dq, dk, dv)``; all
+    arrays in logical token order.  ``offload`` (an ``OffloadManager``)
+    carries the residency budget and telemetry; a fresh unbounded manager
+    is used when omitted.
+    """
+    ca = ChunkedAttention(mesh, cfg, chunks=chunks, offload=offload)
+    out = ca.forward(q, k, v, doc_start=doc_start)
+    return out, ca.vjp

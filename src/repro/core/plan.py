@@ -66,6 +66,29 @@ STATE_BUDGET_FRAC = 0.6
 #: the paged-KV block pool (the rest is activation/workspace headroom).
 SERVE_BUDGET_FRAC = 0.8
 
+#: assumed host↔device wire bandwidth for the chunk-offload traffic model
+#: (PCIe-gen4-ish, matching the checkpoint snapshot path)
+OFFLOAD_WIRE_BYTES_PER_S = 16e9
+
+
+def offload_resident_frac(chunks: int) -> float:
+    """HBM-resident fraction of a chunk-pipelined tensor: the active
+    chunk plus the prefetched next one (the double-buffer schedule the
+    ``OffloadManager`` runs).  1.0 when not chunked."""
+    if chunks <= 1:
+        return 1.0
+    return min(1.0, 2.0 / chunks)
+
+
+def offload_split(total_bytes: float, chunks: int) -> tuple[float, float]:
+    """``(device_bytes, host_bytes)`` of a chunk-pipelined tensor.
+
+    The single split rule shared by the train activation model and the
+    serve KV-pool model, so a byte lives on exactly one side of the
+    accounting — never device-counted *and* host-counted."""
+    dev = total_bytes * offload_resident_frac(chunks)
+    return dev, total_bytes - dev
+
 #: AMSP sharding modes, smallest extent first (Full-Replica → dp-only →
 #: sp-only → full dp×sp).  ``build_plan`` picks the first that fits.
 ZERO_MODES = (
@@ -213,6 +236,9 @@ class ExecutionPlan:
     #: expected mean document length of the packed stream (the cost
     #: model's ``packing`` term; None => seq_len, i.e. no packing win)
     mean_doc_len: int | None = None
+    #: FPDT chunk pipeline: sequence chunks streamed through attention
+    #: with inactive chunks in host memory (1 = fully resident)
+    offload_chunks: int = 1
     mem: dict = dataclasses.field(default_factory=dict)
 
     # -- sharding factories -------------------------------------------------
@@ -248,23 +274,33 @@ class ExecutionPlan:
 
     def serve_spec(self, *, page_size: int = 16, max_batch: int = 8,
                    max_seq_len: int | None = None,
-                   prefill_chunk: int = 64) -> ServeSpec | None:
+                   prefill_chunk: int = 64,
+                   offload_chunks: int | None = None) -> ServeSpec | None:
         """Paged-serving geometry from the memory model: bf16 weights and
         per-slot window rings are charged against the budget first; the
         paged block pool takes what's left, capped at the usable maximum
         ``max_batch × max_blocks_per_seq`` (blocks beyond every slot's
         worst case can never be handed out).  None for families without a
-        paged decode path."""
+        paged decode path.
+
+        Chunk offload (``offload_chunks``, default: the plan's) reuses
+        ``offload_split``: only the resident fraction of a block is
+        charged against HBM — the same rule the train activation model
+        applies, so a KV byte is accounted device-side *or* host-side,
+        never both."""
         per_tok, win_bytes = serve_kv_bytes(self.cfg)
         if per_tok is None:
             return None
+        chunks = self.offload_chunks if offload_chunks is None \
+            else offload_chunks
         max_seq = max_seq_len or self.seq_len or 4096
         max_blocks_per_seq = -(-max_seq // page_size)
         headroom = (self.memory_budget * SERVE_BUDGET_FRAC
                     - self.mem.get("n_params", 0) * HALF_BYTES_PER_PARAM
                     - max_batch * win_bytes)
         cap = max_batch * max_blocks_per_seq
-        fit = int(headroom // max(per_tok * page_size, 1))
+        block_dev, _ = offload_split(per_tok * page_size, chunks)
+        fit = int(headroom // max(block_dev, 1))
         num_blocks = max(min(fit, cap), max_blocks_per_seq)
         return ServeSpec(page_size=page_size, num_blocks=num_blocks,
                          max_blocks_per_seq=max_blocks_per_seq,
@@ -390,6 +426,14 @@ class ExecutionPlan:
             f"acts≈{_fmt_bytes(m.get('act_dev', 0))} "
             f"total≈{_fmt_bytes(m.get('total_dev', 0))} "
             f"/ budget {_fmt_bytes(self.memory_budget)}")
+        max_seq = m.get("max_seq_at_budget")
+        lines.append(
+            f"  offload     chunks={self.offload_chunks} "
+            f"resident={offload_resident_frac(self.offload_chunks):.2f} "
+            f"act_host={_fmt_bytes(m.get('act_host', 0))} "
+            f"wire≈{m.get('offload_wire_s', 0) * 1e3:.1f}ms/step "
+            f"max_seq@budget≈"
+            f"{max_seq if max_seq is not None else 'n/a'}")
         lines.append(
             f"  ckpt        bytes/host="
             f"{_fmt_bytes(m.get('ckpt_bytes_host', 0))} "
@@ -418,6 +462,7 @@ def plan_memory(cfg, pc: ParallelConfig, *, grad_accum: int = 1,
                 include_pod: bool = False,
                 seq_len: int | None = None,
                 global_batch: int | None = None,
+                offload_chunks: int = 1,
                 mesh=None):
     """The param+optimizer+activation memory model behind ``build_plan``.
 
@@ -427,6 +472,13 @@ def plan_memory(cfg, pc: ParallelConfig, *, grad_accum: int = 1,
     enumeration scale.  Returns ``(remat_policy, zero_mode, groups, mem)``
     where ``mem`` carries the per-device estimates plus the feasibility
     verdicts ``fits_state`` / ``fits``.
+
+    ``offload_chunks > 1`` applies the FPDT chunk-pipeline split: only
+    ``offload_resident_frac`` of the sequence-extensive bytes stay in HBM
+    (``act_dev``; the rest is ``act_host``), in exchange for the PCIe
+    wire time ``offload_wire_s`` of streaming chunks back per step.
+    ``max_seq_at_budget`` is the longest trainable sequence the remaining
+    headroom admits at this residency fraction (monotone in the budget).
     """
     pc.validate()
     assert grad_accum >= 1
@@ -454,14 +506,17 @@ def plan_memory(cfg, pc: ParallelConfig, *, grad_accum: int = 1,
     half_dev = n_params * HALF_BYTES_PER_PARAM / extent
 
     # batch shardability + per-device tokens for the activation model
+    assert offload_chunks >= 1, offload_chunks
     n_batch_dev = pc.pods * pc.dp
     batch_shardable = True
     microbatch = tokens_dev = None
+    tokens_per_seq_unit = None
     if global_batch is not None:
         microbatch = global_batch // grad_accum
         batch_shardable = microbatch % n_batch_dev == 0
+        div = (n_batch_dev if batch_shardable else 1) * pc.sp
+        tokens_per_seq_unit = microbatch / div
         if seq_len is not None:
-            div = (n_batch_dev if batch_shardable else 1) * pc.sp
             tokens_dev = microbatch * seq_len / div
 
     # remat policy
@@ -472,16 +527,44 @@ def plan_memory(cfg, pc: ParallelConfig, *, grad_accum: int = 1,
     else:
         policy = remat or cfg.remat
 
-    act_dev = (tokens_dev or 0) * cfg.d_model * 2 \
+    act_total = (tokens_dev or 0) * cfg.d_model * 2 \
         * ACT_UNITS[policy] * cfg.num_layers
+    act_dev, act_host = offload_split(act_total, offload_chunks)
+
+    # chunk-pipeline wire time: KV chunk j is re-fetched for every
+    # q-chunk i >= j, so a full fwd (and again bwd) round streams
+    # ≈ (C+1)/2 copies of the local K+V; q/out/lse/do staging adds ~4
+    # one-shot tensors.  Copies overlap ring steps, but the wire bytes
+    # are a hard PCIe floor the cost model trades against HBM freed.
+    offload_wire_s = 0.0
+    if offload_chunks > 1 and tokens_dev:
+        kv_bytes = tokens_dev * cfg.d_model * 2 * 2          # K+V, bf16
+        refetch = (offload_chunks + 1) / 2
+        wire = (2 * refetch * kv_bytes + 4 * tokens_dev * cfg.d_model * 2) \
+            * cfg.num_layers
+        offload_wire_s = wire / OFFLOAD_WIRE_BYTES_PER_S
+
     total_dev = state_dev + half_dev + act_dev
+    # longest trainable sequence the activation headroom admits at this
+    # residency fraction (per device, at the plan's microbatch layout)
+    max_seq_at_budget = None
+    if tokens_per_seq_unit:
+        per_seq_unit = tokens_per_seq_unit * cfg.d_model * 2 \
+            * ACT_UNITS[policy] * cfg.num_layers \
+            * offload_resident_frac(offload_chunks)
+        headroom = max(budget - state_dev - half_dev, 0.0)
+        max_seq_at_budget = int(headroom / max(per_seq_unit, 1e-9))
     # sharded-checkpoint footprint: each host serializes only its shards
     # of the fp32 master + Adam moments, so bytes/host (and the blocking
     # device→host snapshot stall) shrink with the ZeRO extent
     ckpt_host = n_params * STATE_BYTES_PER_PARAM / extent
     mem = {"n_params": n_params, "state_dev": state_dev,
            "half_dev": half_dev, "act_dev": act_dev,
+           "act_host": act_host,
            "total_dev": total_dev,
+           "offload_chunks": offload_chunks,
+           "offload_wire_s": offload_wire_s,
+           "max_seq_at_budget": max_seq_at_budget,
            "ckpt_bytes_host": ckpt_host,
            "ckpt_stall_s": ckpt_host / CKPT_D2H_BYTES_PER_S,
            "zero_extent": extent, "microbatch": microbatch,
@@ -503,6 +586,7 @@ def build_plan(cfg, pc: ParallelConfig | None = None, opt=None, *,
                global_batch: int | None = None,
                packed: bool = False,
                mean_doc_len: int | None = None,
+               offload_chunks: int | None = None,
                tuned=None) -> ExecutionPlan:
     """Build the ExecutionPlan — the only place these decisions are made.
 
@@ -542,7 +626,10 @@ def build_plan(cfg, pc: ParallelConfig | None = None, opt=None, *,
             seq_len = tuned.seq_len
         if global_batch is None:
             global_batch = tuned.global_batch
+        if offload_chunks is None:
+            offload_chunks = getattr(tuned, "offload_chunks", 1)
     grad_accum = 1 if grad_accum is None else grad_accum
+    offload_chunks = 1 if offload_chunks is None else offload_chunks
     zero = zero or "auto"
     pc = pc or ParallelConfig()
     opt = opt or OptConfig()
@@ -560,7 +647,8 @@ def build_plan(cfg, pc: ParallelConfig | None = None, opt=None, *,
     policy, zero_mode, groups, mem = plan_memory(
         cfg, pc, grad_accum=grad_accum, remat=remat, zero=zero,
         memory_budget_gb=memory_budget_gb, include_pod=include_pod,
-        seq_len=seq_len, global_batch=global_batch, mesh=mesh)
+        seq_len=seq_len, global_batch=global_batch,
+        offload_chunks=offload_chunks, mesh=mesh)
     if policy != cfg.remat:
         cfg = dataclasses.replace(cfg, remat=policy)
 
@@ -572,4 +660,4 @@ def build_plan(cfg, pc: ParallelConfig | None = None, opt=None, *,
                          memory_budget=memory_budget_gb * 1e9,
                          seq_len=seq_len, global_batch=global_batch,
                          packed=packed, mean_doc_len=mean_doc_len,
-                         mem=mem)
+                         offload_chunks=offload_chunks, mem=mem)

@@ -27,6 +27,12 @@ block-causal masking through the 2D-Attention stack; ``--mean-doc-len``
 scales the document-length distribution and the cost model's packing
 term (default ``seq_len // 4``).
 
+``--offload-chunks N`` enables FPDT sequence-chunk pipelining: the plan's
+memory model charges only the HBM-resident chunk fraction (active + next)
+and reports the PCIe wire-time floor plus ``max_seq@budget`` in
+``plan.describe()``.  The PlanTuner proposes a depth automatically when
+the resident plan does not fit the budget.
+
 PlanTuner integration: ``--plan-file plan.json`` consumes a persisted
 ``TunedPlan`` (no search — the cached winner supplies dp/hp/cp/placement,
 grad-accum, remat and ZeRO); ``--tune`` runs the enumerate+score search
@@ -73,6 +79,12 @@ def main():
                          "stream (default: seq_len // 4); sets the data "
                          "source's length range and the cost model's "
                          "packing term")
+    ap.add_argument("--offload-chunks", type=int, default=None,
+                    help="FPDT sequence-chunk pipelining: stream the "
+                         "sequence through attention in this many chunks "
+                         "with inactive K/V staged in host memory "
+                         "(default: 1 = fully resident, or the tuned "
+                         "plan's value under --plan-file)")
     launch_args.add_plan_source(ap)
     launch_args.add_checkpointing(ap)
     ap.add_argument("--distributed", action="store_true",
@@ -124,7 +136,7 @@ def main():
                       remat=args.remat, seq_len=seq, global_batch=gb,
                       packed=args.pack,
                       mean_doc_len=mean_doc if args.pack else None,
-                      tuned=tuned)
+                      offload_chunks=args.offload_chunks, tuned=tuned)
     print(plan.describe())
     trainer = Trainer(
         plan, plan.data_config(seq, gb),

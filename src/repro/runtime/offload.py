@@ -1,0 +1,208 @@
+"""Host KV offload: chunk residency management for sequence-chunk
+pipelined attention (FPDT, arxiv 2408.16978; the ROADMAP's long-context
+item).
+
+The double-ring path keeps the whole local sequence in HBM, so max
+trainable context is capped by device memory.  Chunk pipelining streams
+the sequence through attention one chunk at a time; everything not in
+flight lives in (pinned) host memory.  ``OffloadManager`` is the broker:
+
+* ``put(key, arr)``    — device → host snapshot (D2H); the device copy is
+  dropped from the residency account.
+* ``prefetch(key)``    — start the host → device copy (``jax.device_put``
+  dispatches asynchronously, so a prefetch issued one chunk ahead
+  overlaps the copy against the current chunk's ring steps).
+* ``get(key)``         — the device array, *after* the H2D copy has
+  landed: an in-flight copy is waited on (``block_until_ready``) before
+  any byte is readable, so a consumer can never observe a torn chunk.
+  A ``get`` without a prior ``prefetch`` still works but counts a
+  ``stall`` — the pipeline-quality signal the property tests and the
+  offload bench track.
+* ``release(key)``     — drop the device copy; the host bits are already
+  current (no D2H traffic for read-only chunks like K/V).
+* ``accumulate(key, delta)`` — host-side fp32 ``+=`` for gradients that
+  come home chunk by chunk (dk/dv in the backward pipeline).
+
+Residency accounting is the contract: ``device_bytes`` tracks every
+manager-held device chunk, ``peak_device_bytes`` the high-water mark, and
+a configured ``budget_bytes`` is *enforced* — a fetch that would exceed
+it raises :class:`BudgetExceeded` instead of silently oversubscribing
+HBM.  ``tests/test_offload.py`` drives random schedules against these
+invariants (never read before landing, never exceed the budget, evict/
+prefetch round-trips are bitwise identity).
+
+Pure host/device bookkeeping: no repro imports, so ``core`` modules may
+depend on it freely.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Hashable
+
+import numpy as np
+
+#: chunk residency states
+HOST, FETCHING, DEVICE = "host", "fetching", "device"
+
+
+class BudgetExceeded(RuntimeError):
+    """A fetch would push manager-held device bytes over the budget."""
+
+
+@dataclasses.dataclass
+class _Entry:
+    host: np.ndarray | None = None
+    dev: Any = None
+    state: str = HOST
+    landed: bool = False          # H2D copy known complete
+    nbytes: int = 0
+
+
+class OffloadManager:
+    """Host↔device chunk broker with enforced residency accounting.
+
+    ``budget_bytes=None`` disables enforcement (accounting still runs).
+    """
+
+    def __init__(self, budget_bytes: int | None = None):
+        self.budget_bytes = budget_bytes
+        self._entries: dict[Hashable, _Entry] = {}
+        # accounting / telemetry
+        self.device_bytes = 0
+        self.peak_device_bytes = 0
+        self.host_bytes = 0
+        self.h2d_bytes = 0
+        self.d2h_bytes = 0
+        self.stalls = 0     # get() before any prefetch (sync fetch)
+        self.waits = 0      # get() blocked on an in-flight copy
+
+    # -- internal ----------------------------------------------------------
+
+    def _charge(self, key, n: int):
+        if self.budget_bytes is not None \
+                and self.device_bytes + n > self.budget_bytes:
+            raise BudgetExceeded(
+                f"fetching {key!r} ({n}B) would put device residency at "
+                f"{self.device_bytes + n}B > budget {self.budget_bytes}B")
+        self.device_bytes += n
+        self.peak_device_bytes = max(self.peak_device_bytes,
+                                     self.device_bytes)
+
+    def _entry(self, key) -> _Entry:
+        e = self._entries.get(key)
+        assert e is not None, f"unknown offload chunk {key!r}"
+        return e
+
+    # -- public ------------------------------------------------------------
+
+    def put(self, key, arr) -> None:
+        """Stage ``arr`` on the host (D2H copy); drops any device copy."""
+        host = np.asarray(arr)
+        old = self._entries.get(key)
+        if old is not None:
+            if old.state != HOST:
+                self.device_bytes -= old.nbytes
+            if old.host is not None:
+                self.host_bytes -= old.host.nbytes
+        self._entries[key] = _Entry(host=host, state=HOST,
+                                    nbytes=host.nbytes)
+        self.host_bytes += host.nbytes
+        self.d2h_bytes += host.nbytes
+
+    def accumulate(self, key, delta) -> None:
+        """Host-side fp32 ``+=`` (first call initializes from ``delta``)."""
+        d = np.asarray(delta, np.float32)
+        e = self._entries.get(key)
+        self.d2h_bytes += d.nbytes
+        if e is None or e.host is None:
+            self._entries[key] = _Entry(host=d.copy(), state=HOST,
+                                        nbytes=d.nbytes)
+            self.host_bytes += d.nbytes
+        else:
+            assert e.state == HOST, f"accumulate into resident {key!r}"
+            e.host = e.host + d
+
+    def prefetch(self, key) -> None:
+        """Start the async H2D copy; no-op if already in flight/resident."""
+        e = self._entry(key)
+        if e.state != HOST:
+            return
+        assert e.host is not None, f"{key!r} has no host copy to fetch"
+        self._charge(key, e.nbytes)
+        import jax
+        e.dev = jax.device_put(e.host)       # dispatches asynchronously
+        e.state, e.landed = FETCHING, False
+        self.h2d_bytes += e.nbytes
+
+    def get(self, key):
+        """The device array for ``key`` — never before its copy landed."""
+        e = self._entry(key)
+        if e.state == HOST:
+            self.stalls += 1                 # pipeline bubble: sync fetch
+            self.prefetch(key)
+        if e.state == FETCHING:
+            self.waits += 1
+            import jax
+            jax.block_until_ready(e.dev)     # the landing barrier
+            e.state, e.landed = DEVICE, True
+        assert e.state == DEVICE and e.landed, (key, e.state)
+        return e.dev
+
+    def release(self, key) -> None:
+        """Drop the device copy; host bits stay current (no D2H)."""
+        e = self._entry(key)
+        if e.state == HOST:
+            return
+        if e.state == FETCHING:
+            import jax
+            jax.block_until_ready(e.dev)     # cannot free mid-copy
+        e.dev, e.state, e.landed = None, HOST, False
+        self.device_bytes -= e.nbytes
+
+    def host_array(self, key) -> np.ndarray:
+        """The host copy (for final gather of accumulated grads)."""
+        e = self._entry(key)
+        assert e.host is not None, key
+        return e.host
+
+    def discard(self, key) -> None:
+        """Forget ``key`` entirely, returning its bytes to the accounts."""
+        e = self._entries.pop(key, None)
+        if e is None:
+            return
+        if e.state != HOST:
+            self.device_bytes -= e.nbytes
+        if e.host is not None:
+            self.host_bytes -= e.host.nbytes
+
+    def keys(self):
+        return self._entries.keys()
+
+    def resident(self):
+        """Keys currently holding device bytes (fetching or landed)."""
+        return [k for k, e in self._entries.items() if e.state != HOST]
+
+    def stats(self) -> dict:
+        return {"device_bytes": self.device_bytes,
+                "peak_device_bytes": self.peak_device_bytes,
+                "host_bytes": self.host_bytes,
+                "h2d_bytes": self.h2d_bytes, "d2h_bytes": self.d2h_bytes,
+                "stalls": self.stalls, "waits": self.waits}
+
+
+def prefetched(mgr: OffloadManager, keys, *, depth: int = 2,
+               release: bool = True):
+    """Iterate ``(key, device_array)`` with a ``depth``-deep prefetch
+    window — the double-buffer schedule (depth=2: active + next) that the
+    pipelined loops use.  With enough budget for ``depth`` chunks this
+    schedule incurs zero stalls (a property the tests pin)."""
+    keys = list(keys)
+    for k in keys[:depth]:
+        mgr.prefetch(k)
+    for n, k in enumerate(keys):
+        arr = mgr.get(k)
+        if n + depth < len(keys):
+            mgr.prefetch(keys[n + depth])
+        yield k, arr
+        if release:
+            mgr.release(k)

@@ -16,7 +16,9 @@ import os
 
 from repro.core.topology import ParallelConfig
 
-TUNED_PLAN_VERSION = 1
+#: v2 added ``offload_chunks`` (FPDT chunk pipelining); v1 files load
+#: fine — ``from_json`` filters unknown names and missing fields default.
+TUNED_PLAN_VERSION = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +38,7 @@ class TunedPlan:
     grad_accum: int = 1
     remat: str = "scpp"            # resolved policy, never "auto"
     zero: str = "replica"          # ZERO_MODES name
+    offload_chunks: int = 1        # FPDT chunk pipeline (1 = resident)
     page_size: int = 16            # serve-spec geometry that rode along
     # provenance
     predicted_s: float | None = None

@@ -32,6 +32,10 @@ DEFAULT_REMATS = ("none", "scpp", "full")
 DEFAULT_ZEROS = ("replica", "dp", "sp", "dp_sp")
 DEFAULT_PLACEMENTS = ("head_first", "context_first")
 MAX_INNER = 8          # paper's w sweep tops out at 8 (Table 5)
+#: FPDT chunk-offload depths tried *only* when the resident point is
+#: memory-infeasible — offload trades PCIe wire time for HBM, so it can
+#: never beat the resident plan when the resident plan fits.
+DEFAULT_OFFLOADS = (4, 8, 16)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,13 +47,17 @@ class Candidate:
     zero: str               # ZERO_MODES name
     zero_extent: int
     mem: dict               # plan_memory() output
+    offload_chunks: int = 1  # FPDT chunk pipeline (1 = resident)
 
     @property
     def tag(self) -> str:
         p = self.pc
-        return (f"dp{p.dp}.hp{p.hp}.cp{p.cp_outer}x{p.cp_inner}."
+        base = (f"dp{p.dp}.hp{p.hp}.cp{p.cp_outer}x{p.cp_inner}."
                 f"{'hf' if p.placement == 'head_first' else 'cf'}."
                 f"a{self.grad_accum}.{self.remat}.{self.zero}")
+        if self.offload_chunks > 1:
+            base += f".off{self.offload_chunks}"
+        return base
 
 
 def _divisors(n: int):
@@ -83,6 +91,16 @@ def seq_ok(cfg, sp: int, cp: int, seq_len: int) -> bool:
     return True
 
 
+def chunks_ok(cfg, pc, seq_len: int, chunks: int) -> bool:
+    """An FPDT chunk count is admissible when each chunk satisfies the
+    same layout constraints as a full sequence: shardable over sp, and
+    (under zigzag) an even per-cp-rank sub-chunk."""
+    if chunks < 1 or seq_len % chunks:
+        return False
+    sc = seq_len // chunks
+    return seq_ok(cfg, pc.sp, pc.cp, sc)
+
+
 def enumerate_space(cfg, *, num_devices: int, seq_len: int,
                     global_batch: int, pods: int = 1,
                     memory_budget_gb: float = 16.0,
@@ -90,6 +108,7 @@ def enumerate_space(cfg, *, num_devices: int, seq_len: int,
                     accums=DEFAULT_ACCUMS, remats=DEFAULT_REMATS,
                     zeros=DEFAULT_ZEROS, placements=DEFAULT_PLACEMENTS,
                     max_inner: int = MAX_INNER,
+                    offloads=DEFAULT_OFFLOADS,
                     include_infeasible: bool = False):
     """Yield every feasible :class:`Candidate` for the instance.
 
@@ -100,6 +119,10 @@ def enumerate_space(cfg, *, num_devices: int, seq_len: int,
 
     ZeRO modes that resolve to the same sharding extent on this mesh
     (e.g. every mode at dp=sp=1) are deduplicated, keeping the first.
+
+    ``offloads``: FPDT chunk depths tried when (and only when) the
+    resident point does not fit — the cost model then trades offload
+    depth (HBM freed) against PCIe wire time among the feasible depths.
     """
     assert num_devices % pods == 0, (num_devices, pods)
     per_pod = num_devices // pods
@@ -134,12 +157,13 @@ def enumerate_space(cfg, *, num_devices: int, seq_len: int,
                 for pc in pcs:
                     out.extend(_expand_exec(
                         cfg, pc, seq_len, global_batch, memory_budget_gb,
-                        accums, remats, zeros, include_infeasible))
+                        accums, remats, zeros, offloads,
+                        include_infeasible))
     return out
 
 
 def _expand_exec(cfg, pc, seq_len, global_batch, memory_budget_gb,
-                 accums, remats, zeros, include_infeasible):
+                 accums, remats, zeros, offloads, include_infeasible):
     out = []
     n_batch_dev = pc.pods * pc.dp
     seen_extents = set()
@@ -159,10 +183,29 @@ def _expand_exec(cfg, pc, seq_len, global_batch, memory_budget_gb,
                     cfg, pc, grad_accum=accum, remat=remat, zero=zero,
                     memory_budget_gb=memory_budget_gb,
                     seq_len=seq_len, global_batch=global_batch)
-                if not mem["fits"] and not include_infeasible:
+                if mem["fits"] or include_infeasible:
+                    out.append(Candidate(
+                        pc=pc, grad_accum=accum, remat=policy,
+                        zero=zero_mode, zero_extent=mem["zero_extent"],
+                        mem=mem))
+                if mem["fits"] or not mem["fits_state"]:
+                    # Offload frees activations only: a point whose
+                    # *state* does not fit stays infeasible at any depth,
+                    # and a resident-feasible point never wants offload
+                    # (it would pay wire time for memory it has).
                     continue
-                out.append(Candidate(pc=pc, grad_accum=accum,
-                                     remat=policy, zero=zero_mode,
-                                     zero_extent=mem["zero_extent"],
-                                     mem=mem))
+                for chunks in offloads:
+                    if not chunks_ok(cfg, pc, seq_len, chunks):
+                        continue
+                    policy_c, zero_c, _, mem_c = plan_memory(
+                        cfg, pc, grad_accum=accum, remat=remat,
+                        zero=zero, memory_budget_gb=memory_budget_gb,
+                        seq_len=seq_len, global_batch=global_batch,
+                        offload_chunks=chunks)
+                    if not mem_c["fits"] and not include_infeasible:
+                        continue
+                    out.append(Candidate(
+                        pc=pc, grad_accum=accum, remat=policy_c,
+                        zero=zero_c, zero_extent=mem_c["zero_extent"],
+                        mem=mem_c, offload_chunks=chunks))
     return out

@@ -65,7 +65,9 @@ class TuneResult:
             pods=pc.pods, dp=pc.dp, hp=pc.hp, cp_outer=pc.cp_outer,
             cp_inner=pc.cp_inner, placement=pc.placement,
             grad_accum=s.cand.grad_accum, remat=s.cand.remat,
-            zero=s.cand.zero, page_size=page_size,
+            zero=s.cand.zero,
+            offload_chunks=getattr(s.cand, "offload_chunks", 1),
+            page_size=page_size,
             predicted_s=s.score_s, measured_s=s.measured_s,
             calibration=self.const.source, space_size=self.space_size)
 
@@ -104,7 +106,8 @@ def score_candidate(cfg, cand: Candidate, *, seq_len: int,
     case = AttnCase(s=seq_len, d=cfg.d_model, h=cfg.n_heads,
                     h_kv=cfg.n_kv_heads, sp=pc.sp, hp=pc.hp,
                     w=pc.cp_inner, placement=pc.placement,
-                    packing=packing)
+                    packing=packing,
+                    offload_chunks=getattr(cand, "offload_chunks", 1))
     terms = train_step_time(
         case, d_ff=cfg.d_ff, n_layers=cfg.num_layers, remat=cand.remat,
         seqs_per_group=global_batch / (pc.pods * pc.dp),

@@ -588,6 +588,88 @@ def check_ckpt_elastic():
     print("PASS ckpt_elastic")
 
 
+def check_offload_parity():
+    """FPDT sequence-chunk pipeline (host KV offload) == resident
+    double-ring: outputs and all three grads to 1e-5 on the ring 2x2,
+    Ulysses hp=2 and combined hp×cp grids, zigzag on, on the Pallas
+    kernel path (the jnp fallbacks are poisoned) — including packed
+    documents whose boundaries straddle the chunk edges, the case the
+    chunk-base BandMask shift exists for."""
+    from repro.core.topology import ParallelConfig, make_mesh
+    from repro.core.attention2d import (Attn2DConfig, attention_2d,
+                                        chunked_attention_2d)
+    from repro.core.zigzag import to_zigzag, from_zigzag
+    from repro.kernels import ref as ref_mod
+    from repro.runtime.offload import OffloadManager
+
+    rng = np.random.default_rng(11)
+    B, S, H, HKV, D, C = 1, 128, 4, 2, 16, 4
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, HKV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, HKV, D)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+
+    # packed stream whose document boundaries straddle the chunk edges
+    # (S=128, C=4 -> edges at 32/64/96; docs start at 20/50/90)
+    starts = [0, 20, 50, 90]
+    doc_np = np.zeros((B, S), np.int32)
+    for s0, s1 in zip(starts, starts[1:] + [S]):
+        doc_np[:, s0:s1] = s0
+    doc = jnp.asarray(doc_np)
+
+    def boom(*a, **kw):
+        raise AssertionError("jnp fallback selected on the chunked path")
+
+    poisoned = ("attention_ref_chunked", "attention_bwd_ref_chunked")
+    saved = {n: getattr(ref_mod, n) for n in poisoned}
+
+    grids = [("ring2x2", 1, 2, 2), ("ulysses_hp2", 2, 1, 1),
+             ("combined", 2, 2, 2)]
+    for tag, hp, no, wi in grids:
+        pc = ParallelConfig(dp=1, hp=hp, cp_outer=no, cp_inner=wi)
+        mesh = make_mesh(pc)
+        cp = pc.cp
+        cfg = Attn2DConfig(hp=hp, n_out=no, w=wi, causal=True,
+                           impl="pallas_interpret")
+        for docs in (None, doc):
+            def resident(q, k, v):
+                qz, kz, vz = (to_zigzag(x, cp) for x in (q, k, v))
+                dz = None if docs is None else to_zigzag(docs, cp)
+                with mesh:
+                    out = attention_2d(qz, kz, vz, mesh=mesh, cfg=cfg,
+                                       doc_start=dz)
+                out = from_zigzag(out, cp)
+                return (out * w).sum(), out
+
+            with mesh:
+                (loss_r, o_r), g_r = jax.value_and_grad(
+                    resident, argnums=(0, 1, 2), has_aux=True)(q, k, v)
+
+            for n in poisoned:
+                setattr(ref_mod, n, boom)
+            try:
+                mgr = OffloadManager()
+                with mesh:
+                    o_c, vjp = chunked_attention_2d(
+                        q, k, v, mesh=mesh, cfg=cfg, chunks=C,
+                        doc_start=docs, offload=mgr)
+                    g_c = vjp(w)           # loss = (out*w).sum => d_out = w
+            finally:
+                for n, fn in saved.items():
+                    setattr(ref_mod, n, fn)
+
+            packed = "packed" if docs is not None else "dense"
+            loss_c = float((np.asarray(o_c, np.float64)
+                            * np.asarray(w, np.float64)).sum())
+            rel = abs(loss_c - float(loss_r)) / max(1.0, abs(float(loss_r)))
+            assert rel < 1e-5, (tag, packed, loss_c, float(loss_r))
+            assert err(o_c, o_r) < 1e-5, (tag, packed, err(o_c, o_r))
+            for a, b in zip(g_c, g_r):
+                assert err(a, b) < 1e-5, (tag, packed, err(a, b))
+            assert mgr.stalls == 0, (tag, packed, mgr.stats())
+    print("PASS offload_parity")
+
+
 CHECKS = {name[len("check_"):]: fn for name, fn in list(globals().items())
           if name.startswith("check_")}
 

@@ -15,7 +15,7 @@ pytestmark = pytest.mark.dist
 _CHECKS = ["attention_grid", "attention_modes", "ring_pallas_path", "ssm",
            "moe", "e2e_loss", "decode_consistency", "grad_compression",
            "plan_placement", "accum_collectives", "packed_parity",
-           "ckpt_elastic"]
+           "ckpt_elastic", "offload_parity"]
 
 
 @pytest.mark.parametrize("check", _CHECKS)

@@ -1,0 +1,196 @@
+"""OffloadManager invariants + single-device chunk-pipeline parity.
+
+Property tests (hypothesis, or the deterministic stub in
+``tests/_hypothesis_stub.py``) drive random chunk schedules against the
+residency contract of ``repro/runtime/offload.py``:
+
+* a consumer can never read a chunk before its H2D copy has landed
+  (``get`` is the landing barrier, un-prefetched reads count a stall);
+* manager-held device bytes never exceed a configured budget —
+  oversubscription raises ``BudgetExceeded`` instead of silently
+  spilling;
+* put → prefetch → get round-trips are bitwise identity;
+* the ``prefetched()`` double-buffer schedule runs stall-free.
+
+The parity test at the bottom pins ``chunked_attention_2d`` (the FPDT
+sequence-chunk pipeline) against the resident oracle on one device; the
+multi-device grids live in ``tests/_dist_checks.py::check_offload_parity``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime.offload import (HOST, BudgetExceeded, OffloadManager,
+                                   prefetched)
+
+RNG = np.random.default_rng(0)
+
+
+def chunk(shape=(4, 8), dtype=np.float32, rng=RNG):
+    return np.asarray(rng.standard_normal(shape), dtype)
+
+
+# -- read-before-landing ----------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6),
+       n_keys=st.integers(min_value=1, max_value=4),
+       n_ops=st.integers(min_value=5, max_value=40))
+def test_random_schedule_never_reads_unlanded(seed, n_keys, n_ops):
+    """Whatever the schedule, ``get`` only ever returns a landed device
+    array whose bytes equal the staged host copy."""
+    rng = np.random.default_rng(seed)
+    mgr = OffloadManager()
+    model = {}
+    for i in range(n_keys):
+        arr = chunk(rng=rng)
+        model[i] = arr
+        mgr.put(i, arr)
+    for _ in range(n_ops):
+        key = int(rng.integers(0, n_keys))
+        op = ("put", "prefetch", "get", "release")[int(rng.integers(0, 4))]
+        if op == "put":
+            model[key] = chunk(rng=rng)
+            mgr.put(key, model[key])
+        elif op == "prefetch":
+            mgr.prefetch(key)
+        elif op == "release":
+            mgr.release(key)
+        else:
+            dev = mgr.get(key)
+            e = mgr._entries[key]
+            assert e.state == "device" and e.landed
+            assert np.array_equal(np.asarray(dev), model[key])
+    # accounting closes: resident bytes are exactly the device account
+    assert mgr.device_bytes == sum(mgr._entries[k].nbytes
+                                   for k in mgr.resident())
+    assert mgr.device_bytes <= mgr.peak_device_bytes
+
+
+# -- budget enforcement -----------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(budget_chunks=st.integers(min_value=1, max_value=3),
+       n_keys=st.integers(min_value=2, max_value=6))
+def test_budget_never_exceeded(budget_chunks, n_keys):
+    one = chunk().nbytes
+    mgr = OffloadManager(budget_bytes=budget_chunks * one)
+    for i in range(n_keys):
+        mgr.put(i, chunk())
+    fetched = 0
+    for i in range(n_keys):
+        if fetched < budget_chunks:
+            mgr.prefetch(i)
+            fetched += 1
+            assert mgr.device_bytes <= mgr.budget_bytes
+        else:
+            before = mgr.device_bytes
+            with pytest.raises(BudgetExceeded):
+                mgr.prefetch(i)
+            # a refused fetch leaves the accounts (and the entry) untouched
+            assert mgr.device_bytes == before
+            assert mgr._entries[i].state == HOST
+    # releasing frees budget for the chunk that was refused
+    if n_keys > budget_chunks:
+        mgr.release(0)
+        mgr.prefetch(budget_chunks)
+        assert mgr.device_bytes <= mgr.budget_bytes
+    assert mgr.peak_device_bytes <= mgr.budget_bytes
+
+
+# -- round-trip identity ----------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [np.float32, np.int32, jnp.bfloat16])
+def test_roundtrip_bitwise_identity(dtype):
+    if dtype is jnp.bfloat16:
+        arr = np.asarray(jnp.asarray(RNG.standard_normal((3, 5)),
+                                     jnp.bfloat16))
+    else:
+        arr = np.asarray(RNG.standard_normal((3, 5)) * 100, dtype)
+    mgr = OffloadManager()
+    mgr.put("x", arr)
+    mgr.prefetch("x")
+    dev = mgr.get("x")
+    assert np.array_equal(np.asarray(dev), arr)
+    mgr.release("x")
+    assert np.array_equal(mgr.host_array("x"), arr)   # evict keeps host bits
+    assert np.array_equal(np.asarray(mgr.get("x")), arr)  # and refetches
+
+
+def test_accumulate_sums_on_host():
+    mgr = OffloadManager()
+    deltas = [chunk() for _ in range(4)]
+    for d in deltas:
+        mgr.accumulate("dk", d)
+    np.testing.assert_allclose(mgr.host_array("dk"),
+                               np.sum(deltas, axis=0), rtol=1e-6)
+    assert mgr.device_bytes == 0      # accumulation never touches HBM
+
+
+# -- double-buffer schedule -------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(n_keys=st.integers(min_value=1, max_value=8),
+       depth=st.integers(min_value=1, max_value=3))
+def test_prefetched_schedule_is_stall_free(n_keys, depth):
+    one = chunk().nbytes
+    mgr = OffloadManager(budget_bytes=(depth + 1) * one)
+    model = {}
+    for i in range(n_keys):
+        model[i] = chunk()
+        mgr.put(i, model[i])
+    seen = []
+    for key, dev in prefetched(mgr, range(n_keys), depth=depth):
+        seen.append(key)
+        assert np.array_equal(np.asarray(dev), model[key])
+    assert seen == list(range(n_keys))
+    assert mgr.stalls == 0
+    assert mgr.resident() == []       # release=True drained everything
+    assert mgr.h2d_bytes == n_keys * one
+
+
+def test_discard_returns_bytes():
+    mgr = OffloadManager()
+    mgr.put("a", chunk())
+    mgr.prefetch("a")
+    mgr.get("a")
+    mgr.discard("a")
+    assert mgr.device_bytes == 0 and mgr.host_bytes == 0
+    mgr.discard("a")                  # idempotent
+
+
+# -- single-device chunk-pipeline parity ------------------------------------
+
+@pytest.mark.parametrize("chunks", [2, 4])
+def test_chunked_attention_matches_resident(chunks):
+    from repro.core.attention2d import Attn2DConfig, chunked_attention_2d
+    from repro.core.topology import ParallelConfig, make_mesh
+    from repro.kernels.ref import attention_ref
+
+    rng = np.random.default_rng(7)
+    B, S, H, HKV, D = 1, 64, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, HKV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, HKV, D)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+
+    def oracle(q, k, v):
+        out, _ = attention_ref(q, k, v, causal=True)
+        return (out * w).sum(), out
+
+    (_, o_ref), g_ref = jax.value_and_grad(
+        oracle, argnums=(0, 1, 2), has_aux=True)(q, k, v)
+
+    mesh = make_mesh(ParallelConfig())
+    cfg = Attn2DConfig(impl="ref")
+    mgr = OffloadManager()
+    with mesh:
+        out, vjp = chunked_attention_2d(q, k, v, mesh=mesh, cfg=cfg,
+                                        chunks=chunks, offload=mgr)
+        grads = vjp(w)               # loss = (out * w).sum  =>  d_out = w
+    np.testing.assert_allclose(out, o_ref, atol=1e-5, rtol=1e-5)
+    for a, b in zip(grads, g_ref):
+        np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+    assert mgr.stalls == 0           # the pipeline prefetches everything

@@ -213,3 +213,86 @@ def test_batch_shardings_follow_accum_layout():
     flat = build_plan(CFG, devices=jax.devices()[:1], grad_accum=1,
                       seq_len=64, global_batch=8)
     assert len(flat.batch_shardings("train")["tokens"].spec) == 2
+
+
+# ---------------------------------------------------------------------------
+# FPDT chunk-offload memory model (device-free via _ShapeOnlyMesh)
+# ---------------------------------------------------------------------------
+
+def test_offload_split_conserves_bytes():
+    from repro.core.plan import offload_resident_frac, offload_split
+    assert offload_resident_frac(1) == 1.0
+    assert offload_resident_frac(2) == 1.0       # both chunks resident
+    assert offload_resident_frac(8) == 0.25      # active + prefetched of 8
+    for chunks in (1, 2, 4, 8, 16):
+        dev, host = offload_split(1e9, chunks)
+        assert dev + host == 1e9                 # nothing double-counted
+        assert dev == 1e9 * offload_resident_frac(chunks)
+        assert host >= 0
+
+
+def test_plan_memory_offload_trades_hbm_for_wire():
+    from repro.core.plan import plan_memory
+    pc = ParallelConfig(dp=1, hp=2, cp_outer=2, cp_inner=2)
+    mems = {}
+    for chunks in (1, 4, 8, 16):
+        _, _, _, mem = plan_memory(CFG, pc, remat="none",
+                                   memory_budget_gb=0.05, seq_len=8192,
+                                   global_batch=8, offload_chunks=chunks)
+        mems[chunks] = mem
+    total = mems[1]["act_dev"]
+    for a, b in ((1, 4), (4, 8), (8, 16)):
+        assert mems[b]["act_dev"] < mems[a]["act_dev"]        # HBM freed …
+        assert mems[b]["act_host"] > mems[a]["act_host"]      # … to host
+        assert mems[b]["offload_wire_s"] > mems[a]["offload_wire_s"]
+    for mem in mems.values():
+        assert mem["act_dev"] + mem["act_host"] == total      # conserved
+    assert mems[1]["offload_wire_s"] == 0.0
+    # max trainable seq scales as 1/resident_frac = C/2 at a fixed budget
+    base = mems[1]["max_seq_at_budget"]
+    assert base > 0
+    assert mems[8]["max_seq_at_budget"] >= 4 * base
+    assert mems[16]["max_seq_at_budget"] >= 8 * base
+
+
+def test_max_seq_at_budget_monotone_in_budget():
+    from repro.core.plan import plan_memory
+    pc = ParallelConfig(dp=1, hp=2, cp_outer=2, cp_inner=2)
+    prev = -1
+    for budget in (0.02, 0.05, 0.1, 0.5, 1.0):
+        _, _, _, mem = plan_memory(CFG, pc, remat="none",
+                                   memory_budget_gb=budget, seq_len=8192,
+                                   global_batch=8, offload_chunks=8)
+        assert mem["max_seq_at_budget"] >= prev, budget
+        prev = mem["max_seq_at_budget"]
+    assert prev > 0
+
+
+def test_describe_reports_offload_line():
+    plan = build_plan(CFG, devices=jax.devices()[:1], seq_len=128,
+                      global_batch=8, offload_chunks=4)
+    assert plan.offload_chunks == 4
+    s = plan.describe()
+    for frag in ("offload", "chunks=4", "max_seq@budget"):
+        assert frag in s, (frag, s)
+    # resident plans still print the line (chunks=1, no wire term)
+    plan1 = build_plan(CFG, devices=jax.devices()[:1], seq_len=128,
+                       global_batch=8)
+    assert plan1.offload_chunks == 1
+    assert "chunks=1" in plan1.describe()
+
+
+def test_serve_spec_reuses_offload_accounting():
+    """The serve memory model charges only the resident fraction of a KV
+    block under offload — the same ``offload_split`` as training — so KV
+    bytes are never double-counted device-side and the freed HBM shows up
+    as a larger paged pool."""
+    plan = build_plan(CFG, devices=jax.devices()[:1], seq_len=128,
+                      global_batch=8, memory_budget_gb=0.05)
+    kw = dict(max_seq_len=4096, max_batch=64)
+    sv1 = plan.serve_spec(offload_chunks=1, **kw)
+    sv8 = plan.serve_spec(offload_chunks=8, **kw)
+    assert sv8.num_blocks > sv1.num_blocks    # freed HBM -> more pages fit
+    # the logical per-token bytes are unchanged: only residency moved
+    assert sv8.paged_bytes_per_token == sv1.paged_bytes_per_token
+    assert sv8.max_blocks_per_seq == sv1.max_blocks_per_seq

@@ -267,3 +267,72 @@ def test_measure_top_reranks_with_wall_clock():
     # a measured winner still builds + runs
     plan = build_plan(CFG, devices=jax.devices()[:1], tuned=tp)
     assert plan.pc == tp.parallel()
+
+
+# ---------------------------------------------------------------------------
+# FPDT chunk-offload candidates
+# ---------------------------------------------------------------------------
+
+def test_chunks_ok_divisibility_and_zigzag():
+    from repro.tune.space import chunks_ok
+    pc = ParallelConfig(dp=1, hp=2, cp_outer=2, cp_inner=2)   # sp=8, cp=4
+    assert chunks_ok(CFG, pc, 1024, 4)        # sc=256 shards fine
+    assert not chunks_ok(CFG, pc, 1024, 3)    # 1024 % 3 != 0
+    assert not chunks_ok(CFG, pc, 1024, 256)  # sc=4 < sp
+    # zigzag needs an even per-cp-rank sub-chunk: sc=6 over cp=2 is odd
+    pc2 = ParallelConfig(dp=1, hp=1, cp_outer=2, cp_inner=1)
+    assert not chunks_ok(CFG, pc2, 24, 4)
+    assert chunks_ok(CFG, pc2, 32, 4)
+
+
+def test_offload_candidates_only_when_resident_infeasible():
+    """Offload points appear exactly where they help: the resident twin
+    must not fit (activations over budget) while the state does — and a
+    short-sequence, ample-budget space stays fully resident."""
+    cands = enumerate_space(CFG, num_devices=8, seq_len=131072,
+                            global_batch=8, memory_budget_gb=0.05)
+    offs = [c for c in cands if c.offload_chunks > 1]
+    assert offs, "no offload candidates at the infeasible long-seq point"
+    for c in offs:
+        assert c.mem["fits"] and c.mem["fits_state"]
+        assert c.tag.endswith(f".off{c.offload_chunks}")
+        _, _, _, mem_r = plan_memory(
+            CFG, c.pc, grad_accum=c.grad_accum, remat=c.remat,
+            zero=c.zero, memory_budget_gb=0.05, seq_len=131072,
+            global_batch=8)
+        assert not mem_r["fits"], c.tag       # the resident twin does not fit
+    easy = enumerate_space(CFG, num_devices=8, seq_len=256,
+                           global_batch=8, memory_budget_gb=1.0)
+    assert easy and all(c.offload_chunks == 1 for c in easy)
+
+
+def test_tuner_prefers_offload_when_resident_infeasible():
+    r = tune(CFG, num_devices=8, seq_len=131072, global_batch=8,
+             memory_budget_gb=0.05)
+    w = r.winner.cand
+    assert w.offload_chunks > 1
+    tp = r.tuned_plan()
+    assert tp.offload_chunks == w.offload_chunks
+    plan = build_plan(CFG, devices=_fake_devs(8), tuned=tp,
+                      seq_len=131072, global_batch=8,
+                      memory_budget_gb=0.05)
+    assert plan.offload_chunks == tp.offload_chunks
+
+
+def test_tuner_stays_resident_when_it_fits():
+    r = tune(CFG, num_devices=8, seq_len=256, global_batch=8,
+             memory_budget_gb=1.0)
+    assert r.winner.cand.offload_chunks == 1
+    assert r.tuned_plan().offload_chunks == 1
+
+
+def test_tuned_plan_v1_file_loads_with_resident_default(tmp_path):
+    tp = TunedPlan(arch="x", num_devices=4, seq_len=256, global_batch=8)
+    d = tp.to_json()
+    d.pop("offload_chunks")                   # a pre-offload (v1) file
+    d["version"] = 1
+    with open(tmp_path / "v1.json", "w") as f:
+        json.dump(d, f)
+    loaded = TunedPlan.load(str(tmp_path / "v1.json"))
+    assert loaded.version == 1
+    assert loaded.offload_chunks == 1         # defaults to resident
